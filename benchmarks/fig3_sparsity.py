@@ -1,0 +1,44 @@
+"""Paper Fig. 3: normalized tokens/s vs Static Placement across
+attention-sparsity levels, for all five strategies (+ our two extras).
+
+CSV schema: name,us_per_call,derived  where `derived` is the normalized
+tokens/s (static = 1.0) and us_per_call is the simulated per-token
+latency of the strategy.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    EXTRA_STRATEGIES, SA_CFG, STRATEGIES, kv_budget, make_trace, workload,
+)
+from repro.core.experiment import run_strategy
+from repro.core.tiers import GH200
+
+SPARSITIES = (0.4, 0.6, 0.8, 0.9)
+
+
+def run(print_csv: bool = True):
+    wl = workload()
+    rows = []
+    for sp in SPARSITIES:
+        tr = make_trace(sparsity=sp)
+        budget = kv_budget(tr, wl)
+        static = run_strategy("static", tr, GH200, wl, budget)
+        for name in STRATEGIES + EXTRA_STRATEGIES:
+            if name == "static":
+                res = static
+            else:
+                res = run_strategy(name, tr, GH200, wl, budget,
+                                   sa_cfg=SA_CFG)
+            norm = static.total_latency_s / res.total_latency_s
+            us_tok = res.total_latency_s / tr.decode_len * 1e6
+            rows.append((f"fig3/sparsity={sp:.1f}/{res.policy}",
+                         us_tok, norm))
+    if print_csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (semantics of `derived` differ
+per figure and are documented in each module).
+
+  fig3  — normalized tokens/s vs Static across attention sparsity
+  fig4  — normalized tokens/s vs Unlimited-HBM, low/high importance
+          variation
+  fig5  — HBM hit rates at 60% sparsity
+  bound — SA upper bound headline (max speedup, W/R convergence,
+          accepted-move attribution) + beyond-paper policies + TPU tiers
+  engine— live two-tier serving engine (real paged cache) under the
+          same Eq.(1)-(5) accounting
+
+Roofline numbers come from the dry-run (python -m repro.launch.dryrun,
+then python -m repro.launch.roofline), not from this harness — they are
+compile-time artifacts, not wall-time measurements.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    from benchmarks import (fig3_sparsity, fig4_variation, fig5_hitrate,
+                            live_engine, upper_bound)
+    suites = {
+        "fig3": fig3_sparsity.run,
+        "fig4": fig4_variation.run,
+        "fig5": fig5_hitrate.run,
+        "bound": upper_bound.run,
+        "engine": live_engine.run,
+    }
+    if which != "all":
+        suites[which]()
+        return
+    for name, fn in suites.items():
+        print(f"# --- {name} ---")
+        fn()
+
+
+if __name__ == '__main__':
+    main()

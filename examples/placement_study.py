@@ -1,0 +1,60 @@
+"""Placement design-space study: the SA annealer's (W, R) search,
+sensitivity to HBM budget, and the TPU-v5e vs GH200 tier ratios.
+
+Reproduces the paper's Section III-B machinery end to end and prints
+the annealing trajectory — each accepted improvement attributed to a
+window move (dW), ratio move (dR), or diagonal move, exactly the
+paper's three proposal operators.
+
+Run:  PYTHONPATH=src python examples/placement_study.py
+"""
+
+from repro.core.experiment import Workload, run_strategy, tune_sa
+from repro.core.sa import SAConfig
+from repro.core.tiers import GH200, TPU_V5E
+from repro.core.traces import synthetic_trace
+
+
+def main():
+    wl = Workload.llama31_8b()
+    tr = synthetic_trace(prompt_len=20_000, decode_len=800, sparsity=0.75,
+                         variation=0.25, seed=0)
+    total_kv = (tr.prompt_len + tr.decode_len) \
+        * wl.bytes_per_token_layer * wl.num_layers
+
+    # --- SA search over (W, R) -------------------------------------------
+    res = tune_sa(tr, GH200, wl, 0.25 * total_kv,
+                  cfg=SAConfig(max_evaluations=100, seed=0))
+    w, r = res.best_state
+    print(f"SA best (W, R) = ({w}, {r:.1f}) after {res.evaluations} "
+          f"objective evaluations, {res.temperature_levels} temperature "
+          f"levels")
+    print(f"accepted improvements by operator: {res.accept_attribution} "
+          f"(proposals sampled 0.4/0.4/0.2)")
+    accepted = [h for h in res.history if h[3]]
+    print(f"walk: {len(res.history)} proposals, {len(accepted)} accepted")
+
+    # --- sensitivity: HBM budget fraction ---------------------------------
+    print("\nHBM budget sensitivity (SA speedup vs static):")
+    for frac in (0.1, 0.25, 0.5, 0.75):
+        budget = frac * total_kv
+        st = run_strategy("static", tr, GH200, wl, budget)
+        sa = run_strategy("sa", tr, GH200, wl, budget,
+                          sa_cfg=SAConfig(max_evaluations=60, seed=1))
+        print(f"  budget={frac:.0%}: {st.total_latency_s / sa.total_latency_s:5.2f}x "
+              f"(sa hit rate {sa.hbm_hit_rate:.2f})")
+
+    # --- hardware adaptation: GH200 vs TPU v5e ----------------------------
+    print("\ntier-ratio sensitivity (same trace, same budget=25%):")
+    for spec in (GH200, TPU_V5E):
+        st = run_strategy("static", tr, spec, wl, 0.25 * total_kv)
+        sa = run_strategy("sa", tr, spec, wl, 0.25 * total_kv,
+                          sa_cfg=SAConfig(max_evaluations=60, seed=2))
+        print(f"  {spec.name:8s} (HBM:eff-DRAM = {spec.bw_ratio:5.1f}x): "
+              f"SA {st.total_latency_s / sa.total_latency_s:5.2f}x static")
+    print("\n=> the harsher the tier ratio, the more placement matters —"
+          "\n   the paper's conclusion transfers to TPU with MORE headroom.")
+
+
+if __name__ == "__main__":
+    main()

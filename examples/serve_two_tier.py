@@ -1,0 +1,75 @@
+"""End-to-end serving driver: batched requests through the two-tier
+paged KV cache with dynamic placement — the paper's technique live.
+
+Pipeline: train a small model briefly (so generations aren't pure
+noise) -> prefill a batch of prompts -> decode with (a) static
+placement and (b) importance-EMA placement + Quest-style sparsity,
+comparing modeled throughput under the Eq.(1)-(5) cost model, plus the
+continuous batcher admitting a stream of requests.
+
+Run:  PYTHONPATH=src python examples/serve_two_tier.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.tiers import GH200
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models.model import Model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main():
+    cfg = configs.get_smoke("internlm2-1.8b")
+    model = Model(cfg)
+
+    # --- brief training so the model has actual structure ----------------
+    state = init_train_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(model, lr=5e-3))
+    corpus = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                        global_batch=8))
+    for i in range(30):
+        state, metrics = step(state, {"tokens": jnp.asarray(
+            corpus.batch(0, i)["tokens"])})
+    print(f"trained 30 steps, loss {float(metrics['loss']):.3f}")
+
+    # --- serve with both placement policies ------------------------------
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(corpus.batch(0, 99)["tokens"][:4, :64])
+    for policy, sparsity in (("static", 0.6), ("importance", 0.6)):
+        eng = ServingEngine(model, state.params, EngineConfig(
+            max_context=256, hbm_fraction=0.25, policy=policy,
+            attention_sparsity=sparsity, spec=GH200,
+            promote_thresh=0.005))
+        eng.start(prompts)
+        tok = jnp.argmax(eng.step(prompts[:, -1]), -1).astype(jnp.int32)
+        generated = [tok]
+        for _ in range(31):
+            tok = jnp.argmax(eng.step(tok), -1).astype(jnp.int32)
+            generated.append(tok)
+        s = eng.summary()
+        print(f"policy={policy:11s} modeled {s['modeled_tokens_per_s']:12.0f}"
+              f" tok/s  hit={s['mean_hbm_hit_rate']:.2f}"
+              f"  migrated={s['migrated_bytes'] / 1e6:.1f}MB")
+
+    # --- continuous batching over a request stream -----------------------
+    cb = ContinuousBatcher(num_slots=4, total_pages=64)
+    for rid in range(10):
+        cb.submit(Request(rid=rid, prompt_len=48,
+                          max_new_tokens=8 + 4 * (rid % 3)))
+    steps = 0
+    while len(cb.completed) < 10 and steps < 200:
+        cb.step()
+        steps += 1
+    waits = [r.started_step - r.arrived_step for r in cb.completed]
+    print(f"continuous batching: 10 requests in {steps} steps, "
+          f"mean admission wait {np.mean(waits):.1f} steps, "
+          f"final page pressure {cb.page_pressure():.2f}")
+
+
+if __name__ == "__main__":
+    main()

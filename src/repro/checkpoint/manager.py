@@ -1,0 +1,112 @@
+"""Checkpoint manager: async saves, keep-N retention, auto-resume,
+elastic restore — the fault-tolerance control loop of the trainer.
+
+Failure model handled (per DESIGN.md §5):
+  * process crash mid-save        -> COMMIT protocol: partial dirs are
+                                      ignored and garbage-collected;
+  * node loss / re-scale          -> restore reshards onto whatever mesh
+                                      the restarted job has (shardings
+                                      are a restore-time argument);
+  * straggler checkpoint writes   -> saves run on a background thread;
+                                      the train loop never blocks on IO
+                                      (`wait()` only at shutdown);
+  * data-pipeline recovery        -> the manager persists the step, and
+                                      `repro.data` batches are pure
+                                      functions of (seed, shard, step).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, List, Optional
+
+import jax
+
+from repro.checkpoint.ckpt import is_committed, restore_pytree, save_pytree
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.gc_uncommitted()
+
+    # ------------------------------------------------------------------ #
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            m = _STEP_RE.match(d)
+            if m and is_committed(os.path.join(self.root, d)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously (cheap), write async."""
+        self.wait()                       # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+        target = self._dir(step)
+
+        def _write():
+            try:
+                save_pytree(host_tree, target)
+                self._gc()
+            except BaseException as e:     # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------ #
+    def restore(self, target: Any, *, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Any:
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no committed checkpoint to restore"
+        return restore_pytree(target, self._dir(step), shardings=shardings)
+
+    def restore_or_init(self, target: Any, init_fn, *,
+                        shardings: Optional[Any] = None):
+        """Auto-resume: restore the latest committed step or initialize.
+        Returns (tree, start_step)."""
+        step = self.latest_step()
+        if step is None:
+            return init_fn(), 0
+        return self.restore(target, step=step, shardings=shardings), step
+
+    # ------------------------------------------------------------------ #
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+
+    def gc_uncommitted(self) -> None:
+        for d in os.listdir(self.root):
+            full = os.path.join(self.root, d)
+            if _STEP_RE.match(d) and not is_committed(full):
+                shutil.rmtree(full, ignore_errors=True)

@@ -1,0 +1,126 @@
+"""Executable form of the paper's latency model (Section III-A, Eq. 1-5).
+
+A decode step (n, l) moves five kinds of traffic:
+
+  H_r  bytes read from HBM for inference (KV pages resident in HBM,
+       plus model weights — weights are pinned in HBM per the paper)
+  E_r  bytes read from off-package DRAM for inference
+  H_w / E_w  newly written KV entries to HBM / DRAM
+  M_i  KV bytes migrated DRAM -> HBM
+  M_o  KV bytes migrated HBM -> DRAM
+
+Eq. (3):  t_h = (H_r + H_w + M_i + M_o) / B_h
+Eq. (4):  t_e = E_r / min(B_k, B_d)
+               + max( (E_w + M_o)/B_k,          # link, host-bound dir
+                      M_i / B_k,                # link, device-bound dir
+                      (E_w + M_i + M_o)/B_d )   # DRAM channels
+Eq. (2):  t   = max(t_h, t_e)
+Eq. (1):  T   = sum over steps.
+
+Everything is expressed over arrays so an entire decode trace is scored in
+one vectorized call; both numpy and jax.numpy work (the module only uses
+the array API surface they share).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.tiers import MemorySystemSpec
+
+Array = Any  # np.ndarray or jax.Array
+
+
+@dataclasses.dataclass
+class StepTraffic:
+    """Per-step traffic volumes in bytes. Fields broadcast together.
+
+    Each field may be a scalar or an array of shape [num_steps] (or any
+    common broadcast shape, e.g. [num_tokens, num_layers]).
+    """
+
+    h_read: Array = 0.0
+    e_read: Array = 0.0
+    h_write: Array = 0.0
+    e_write: Array = 0.0
+    m_in: Array = 0.0   # DRAM -> HBM migration
+    m_out: Array = 0.0  # HBM -> DRAM migration
+
+    def scale(self, factor: float) -> "StepTraffic":
+        return StepTraffic(
+            h_read=self.h_read * factor,
+            e_read=self.e_read * factor,
+            h_write=self.h_write * factor,
+            e_write=self.e_write * factor,
+            m_in=self.m_in * factor,
+            m_out=self.m_out * factor,
+        )
+
+
+def hbm_latency(t: StepTraffic, spec: MemorySystemSpec) -> Array:
+    """Eq. (3)."""
+    return (t.h_read + t.h_write + t.m_in + t.m_out) / spec.hbm_bw
+
+
+def dram_latency(t: StepTraffic, spec: MemorySystemSpec) -> Array:
+    """Eq. (4)."""
+    read_term = t.e_read / spec.effective_dram_read_bw
+    link_out = (t.e_write + t.m_out) / spec.link_bw   # toward DRAM
+    link_in = t.m_in / spec.link_bw                   # toward HBM
+    dram_chan = (t.e_write + t.m_in + t.m_out) / spec.dram_bw
+    xfer_term = np.maximum(np.maximum(link_out, link_in), dram_chan)
+    return read_term + xfer_term
+
+
+def step_latency(t: StepTraffic, spec: MemorySystemSpec) -> Array:
+    """Eq. (2): the two tiers operate concurrently; the step waits for both."""
+    return np.maximum(hbm_latency(t, spec), dram_latency(t, spec))
+
+
+def total_latency(t: StepTraffic, spec: MemorySystemSpec) -> float:
+    """Eq. (1)."""
+    return float(np.sum(step_latency(t, spec)))
+
+
+def tokens_per_second(t: StepTraffic, spec: MemorySystemSpec,
+                      num_tokens: int) -> float:
+    T = total_latency(t, spec)
+    return num_tokens / T if T > 0 else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Workload byte-accounting helpers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVWorkload:
+    """Static byte-accounting for a decode workload on a given model.
+
+    bytes_per_token_layer: KV bytes appended per generated token per layer
+                           (2 * kv_heads * head_dim * dtype_bytes).
+    weight_bytes_per_layer_step: weight bytes streamed from HBM per layer
+                           per decode step (weights are pinned in HBM).
+    num_layers, prompt_len, decode_len: trace dimensions.
+    """
+
+    bytes_per_token_layer: int
+    weight_bytes_per_layer_step: int
+    num_layers: int
+    prompt_len: int
+    decode_len: int
+
+    @property
+    def page_bytes(self) -> int:
+        raise AttributeError("page size lives in the placement policy")
+
+    def kv_bytes_total(self) -> int:
+        return (self.prompt_len + self.decode_len) * self.num_layers \
+            * self.bytes_per_token_layer
+
+
+def gqa_kv_bytes_per_token_layer(kv_heads: int, head_dim: int,
+                                 dtype_bytes: int = 2) -> int:
+    return 2 * kv_heads * head_dim * dtype_bytes

@@ -1,0 +1,26 @@
+from repro.core.placement.base import (
+    PlacementPolicy, HBM, DRAM, UNALLOC,
+)
+from repro.core.placement.unlimited import UnlimitedHBM
+from repro.core.placement.static import StaticPlacement
+from repro.core.placement.reactive import ReactiveLRU
+from repro.core.placement.quest_pages import QuestPages
+from repro.core.placement.sa_guided import SAGuided
+from repro.core.placement.belady import BeladyOracle
+from repro.core.placement.cost_aware import CostAwareHysteresis
+
+POLICIES = {
+    "unlimited": UnlimitedHBM,
+    "static": StaticPlacement,
+    "reactive": ReactiveLRU,
+    "quest": QuestPages,
+    "sa": SAGuided,
+    "belady": BeladyOracle,
+    "cost_aware": CostAwareHysteresis,
+}
+
+__all__ = [
+    "PlacementPolicy", "HBM", "DRAM", "UNALLOC", "POLICIES",
+    "UnlimitedHBM", "StaticPlacement", "ReactiveLRU", "QuestPages",
+    "SAGuided", "BeladyOracle", "CostAwareHysteresis",
+]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: causal flash attention (prefill / training path).
+
+Standard streaming-softmax tiling adapted to TPU: query and key blocks
+sized for VMEM, MXU-aligned (multiples of 128 on the contracting dims),
+running (m, l, acc) in VMEM scratch. Upper-triangular key blocks are
+masked (not skipped) — the dry-run roofline counts them, and skipping
+via fori_loop-in-kernel is recorded as a §Perf candidate.
+
+Layout: [B, H, S, D] (ops.py handles the [B, S, H, D] public layout).
+Grid: (B, H, NQ, NK), NK innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr,
+            *, q_block: int, k_block: int, causal: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)          # [QB, D]
+    k = k_ref[...].astype(jnp.float32)          # [KB, D]
+    v = v_ref[...].astype(jnp.float32)          # [KB, D]
+    scale = q.shape[-1] ** -0.5
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = iq * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ik * k_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_old = m_scr[...]
+    m_blk = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_old, m_blk)
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.where(m_old <= NEG_INF / 2, 0.0, jnp.exp(m_old - m_safe))
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)[:, None]
+                        ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "q_block", "k_block",
+                                    "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, q_block: int = 256,
+                         k_block: int = 256,
+                         interpret: bool = True) -> jax.Array:
+    """q, k, v: [B, H, S, D] -> out [B, H, S, D]."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    assert Sq % q_block == 0 and Sk % k_block == 0
+
+    grid = (B, H, Sq // q_block, Sk // k_block)
+
+    kernel = functools.partial(_kernel, q_block=q_block, k_block=k_block,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, q_block, D),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((None, None, k_block, D),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((None, None, k_block, D),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, q_block, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

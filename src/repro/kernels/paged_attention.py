@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: paged GQA decode attention over ONE memory tier.
+
+This is the compute hot-spot of the paper's serving path: every decode
+step streams resident KV pages and produces (a) the partial attention
+output for that tier and (b) per-page log-sum-exp scores that the
+placement policy uses as token-importance statistics — so importance
+tracking is free, fused into the attention read pass.
+
+TPU mapping decisions (HARDWARE ADAPTATION notes):
+  * A page (16 tokens x 128 head_dim) is exactly a (16, 128) VMEM tile —
+    the page size the paper takes from Quest happens to be the native
+    TPU sublane x lane tile, so page gathers are aligned DMAs.
+  * The page table is a scalar-prefetch operand
+    (`pltpu.PrefetchScalarGridSpec`): the index_map dereferences
+    page_list BEFORE the grid step runs, so Mosaic can overlap the
+    page DMA of step i+1 with the FLOPs of step i — the TPU analogue
+    of the paper's overlap of link transfers and HBM reads.
+  * Running softmax state (m, l, acc) lives in VMEM scratch; one grid
+    step processes one page for one (batch, kv_head) pair.
+
+Grid: (B, KH, N) with N = max resident pages (innermost, sequential).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_list_ref, page_valid_ref,   # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,             # VMEM blocks
+            out_ref, m_out_ref, l_out_ref, lse_ref,   # outputs
+            m_scr, l_scr, acc_scr,           # scratch
+            *, page_tokens: int):
+    b = pl.program_id(0)
+    kh = pl.program_id(1)
+    i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)        # [G, HD]
+    k = k_ref[...].astype(jnp.float32)        # [T, HD]
+    v = v_ref[...].astype(jnp.float32)        # [T, HD]
+    scale = q.shape[-1] ** -0.5
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # validity: page exists and token offset < page_valid
+    n_valid = page_valid_ref[b, i]
+    exists = page_list_ref[b, i] >= 0
+    tok_ok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) < n_valid
+    valid = tok_ok & exists
+    s = jnp.where(valid, s, NEG_INF)
+
+    # per-page lse (independent of running state -> numerically clean)
+    m_p = jnp.max(s, axis=-1)                              # [G]
+    m_p_safe = jnp.where(m_p <= NEG_INF / 2, 0.0, m_p)
+    p_loc = jnp.where(valid, jnp.exp(s - m_p_safe[:, None]), 0.0)
+    l_p = jnp.sum(p_loc, axis=-1)                          # [G]
+    lse_ref[...] = jnp.where(l_p > 0,
+                             m_p_safe + jnp.log(jnp.maximum(l_p, 1e-37)),
+                             NEG_INF)
+
+    # running softmax update
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, m_p)
+    m_new_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    corr_old = jnp.where(m_old <= NEG_INF / 2, 0.0,
+                         jnp.exp(m_old - m_new_safe))
+    corr_p = jnp.where(l_p > 0, jnp.exp(m_p_safe - m_new_safe), 0.0)
+    pv = jax.lax.dot_general(p_loc, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [G, HD]
+    l_scr[...] = l_scr[...] * corr_old + l_p * corr_p
+    acc_scr[...] = acc_scr[...] * corr_old[:, None] + pv * corr_p[:, None]
+    m_scr[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        l = l_scr[...]
+        out_ref[...] = (acc_scr[...]
+                        / jnp.maximum(l, 1e-20)[:, None]).astype(out_ref.dtype)
+        m_out_ref[...] = m_scr[...]
+        l_out_ref[...] = l
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    page_list: jax.Array, page_valid: jax.Array,
+                    *, interpret: bool = True,
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Semantics identical to `repro.kernels.ref.paged_attention_ref`.
+
+    q: [B, KH, G, HD]; k_pool/v_pool: [B, P, T, KH, HD];
+    page_list/page_valid: [B, N] int32.
+    """
+    B, KH, G, HD = q.shape
+    P, T = k_pool.shape[1], k_pool.shape[2]
+    N = page_list.shape[1]
+
+    grid = (B, KH, N)
+
+    def q_map(b, kh, i, pl_ref, pv_ref):
+        return (b, kh, 0, 0)
+
+    def kv_map(b, kh, i, pl_ref, pv_ref):
+        slot = jnp.maximum(pl_ref[b, i], 0)   # clamp holes to page 0
+        return (b, slot, 0, kh, 0)
+
+    def out_map(b, kh, i, pl_ref, pv_ref):
+        return (b, kh, 0, 0)
+
+    def ml_map(b, kh, i, pl_ref, pv_ref):
+        return (b, kh, 0)
+
+    def lse_map(b, kh, i, pl_ref, pv_ref):
+        return (b, kh, 0, i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, G, HD), q_map),
+            pl.BlockSpec((None, None, T, None, HD), kv_map),
+            pl.BlockSpec((None, None, T, None, HD), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, G, HD), out_map),
+            pl.BlockSpec((None, None, G), ml_map),
+            pl.BlockSpec((None, None, G), ml_map),
+            pl.BlockSpec((None, None, G, None), lse_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, HD), jnp.float32),
+        ],
+    )
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, KH, G, HD), q.dtype),
+        jax.ShapeDtypeStruct((B, KH, G), jnp.float32),
+        jax.ShapeDtypeStruct((B, KH, G), jnp.float32),
+        jax.ShapeDtypeStruct((B, KH, G, N), jnp.float32),
+    ]
+
+    kernel = functools.partial(_kernel, page_tokens=T)
+    out, m, l, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(page_list, page_valid, q, k_pool, v_pool)
+    return out, m, l, lse

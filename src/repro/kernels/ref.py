@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+`paged_attention_ref` defines the exact semantics of the per-tier paged
+decode attention:
+
+  * q:        [B, KH, G, HD]   one query token, grouped GQA layout
+  * k_pool:   [B, P, T, KH, HD] physical page pool of ONE tier
+  * v_pool:   [B, P, T, KH, HD]
+  * page_list:[B, N] int32     pool slot of the n-th resident logical
+                               page; -1 = hole (nothing resident)
+  * page_valid:[B, N] int32    number of valid tokens in that page (0..T)
+
+  returns (out, m, l, page_lse):
+  * out:      [B, KH, G, HD]   UNNORMALIZED partial numerator / l
+  * m:        [B, KH, G]       running max of scores (f32)
+  * l:        [B, KH, G]       sum of exp(score - m) (f32)
+  * page_lse: [B, KH, G, N]    per-page log-sum-exp of scores (f32);
+                               -inf for invalid pages
+
+Two tiers are combined exactly with `merge_partials` (associative
+log-sum-exp merge), which is also how sequence-parallel attention
+composes across devices.
+
+RoPE is applied to K *before* it enters the cache, so page order carries
+no positional meaning and causality reduces to validity masking.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_list, page_valid,
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    B, KH, G, HD = q.shape
+    P, T = k_pool.shape[1], k_pool.shape[2]
+    N = page_list.shape[1]
+    scale = HD ** -0.5
+
+    slot = jnp.clip(page_list, 0, P - 1)                     # [B, N]
+    bidx = jnp.arange(B)[:, None]
+    k = k_pool[bidx, slot]                                   # [B, N, T, KH, HD]
+    v = v_pool[bidx, slot]
+
+    # scores: [B, KH, G, N, T]
+    s = jnp.einsum("bkgd,bntkd->bkgnt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    tok = jnp.arange(T)[None, None, :]
+    valid = (page_list[:, :, None] >= 0) & (tok < page_valid[:, :, None])
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+
+    m = jnp.max(s, axis=(-2, -1))                            # [B, KH, G]
+    # all-invalid guard
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None, None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=(-2, -1))                            # [B, KH, G]
+    num = jnp.einsum("bkgnt,bntkd->bkgd", p, v.astype(jnp.float32))
+    out = num / jnp.maximum(l, 1e-20)[..., None]
+
+    page_lse = jnp.where(
+        jnp.any(valid, -1)[:, None, None],
+        m_safe[..., None] + jnp.log(jnp.maximum(
+            jnp.sum(p, axis=-1), 1e-37)),
+        NEG_INF)                                             # [B, KH, G, N]
+    m = jnp.where(l > 0, m_safe, NEG_INF)
+    return out.astype(q.dtype), m, l, page_lse
+
+
+def pool_attention_ref(q, k_pool, v_pool, page_valid,
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Gather-free tier attention: identity page layout, mask-only.
+
+    Semantically identical to `paged_attention_ref` with
+    page_list = arange(P) (the layout `PagedKVCache.tier_lists` always
+    produces): slot p holds logical data iff page_valid[b, p] > 0.
+
+    This is the SPMD-lowering path: no dynamic gather means GSPMD can
+    keep the pools sharded on the PAGES dim and insert only the small
+    softmax-stat + output all-reduces (the LSE merge is associative
+    over pages, so page-sharding == sequence-parallel attention).
+    Inputs stay bf16; only softmax stats are f32 (no f32 pool copies).
+    """
+    B, KH, G, HD = q.shape
+    P, T = k_pool.shape[1], k_pool.shape[2]
+    scale = HD ** -0.5
+
+    # bf16 dots: the TPU MXU takes bf16 operands with f32 internal
+    # accumulation, so a bf16-out dot is the faithful lowering — an
+    # explicit preferred_element_type=f32 makes the CPU backend
+    # materialize f32 copies of the (huge) pools, which a real TPU
+    # never does. Softmax math stays f32 on the small score tensor.
+    s = jnp.einsum("bkgd,bptkd->bkgpt", q, k_pool)
+    s = s.astype(jnp.float32) * scale
+    tok = jnp.arange(T)[None, None, :]
+    valid = tok < page_valid[:, :, None]                     # [B,P,T]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+
+    m = jnp.max(s, axis=(-2, -1))                            # [B,KH,G]
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None, None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=(-2, -1))
+    num = jnp.einsum("bkgpt,bptkd->bkgd", p.astype(q.dtype), v_pool)
+    out = num.astype(jnp.float32) / jnp.maximum(l, 1e-20)[..., None]
+
+    page_lse = jnp.where(
+        jnp.any(valid, -1)[:, None, None],
+        m_safe[..., None] + jnp.log(jnp.maximum(jnp.sum(p, -1), 1e-37)),
+        NEG_INF)                                             # [B,KH,G,P]
+    m = jnp.where(l > 0, m_safe, NEG_INF)
+    return out.astype(q.dtype), m, l, page_lse
+
+
+def merge_partials(parts) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-tier partial attentions exactly.
+
+    parts: list of (out [**, HD], m [**], l [**]) from paged_attention_ref.
+    Returns (out, lse) with out normalized over the union of tiers.
+    """
+    ms = jnp.stack([p[1] for p in parts])                    # [n, ...]
+    m = jnp.max(ms, axis=0)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    num = 0.0
+    den = 0.0
+    for out, mi, li in parts:
+        corr = jnp.exp(jnp.where(li > 0, mi - m_safe, NEG_INF))
+        num = num + out.astype(jnp.float32) * (li * corr)[..., None]
+        den = den + li * corr
+    merged = num / jnp.maximum(den, 1e-20)[..., None]
+    lse = m_safe + jnp.log(jnp.maximum(den, 1e-37))
+    return merged, lse
+
+
+def page_importance(page_lse: jax.Array, total_lse: jax.Array) -> jax.Array:
+    """Attention mass per page: sum over (KH, G) of exp(page_lse - lse).
+
+    page_lse: [B, KH, G, N]; total_lse: [B, KH, G] -> [B, N] in [0, H].
+    """
+    mass = jnp.exp(page_lse - total_lse[..., None])
+    mass = jnp.where(page_lse <= NEG_INF / 2, 0.0, mass)
+    return mass.sum(axis=(1, 2))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        q_offset: int = 0) -> jax.Array:
+    """Oracle for the prefill flash kernel. q,k,v: [B, S, H, D]."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = (jnp.arange(sk)[None, :]
+                <= (jnp.arange(sq) + q_offset)[:, None])
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

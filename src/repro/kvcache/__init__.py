@@ -1,0 +1,6 @@
+from repro.kvcache.paged import (
+    PagedKVCache, CacheGeometry, init_cache, append_token, page_of_token,
+)
+
+__all__ = ["PagedKVCache", "CacheGeometry", "init_cache", "append_token",
+           "page_of_token"]

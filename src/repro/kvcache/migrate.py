@@ -1,0 +1,137 @@
+"""jit-safe page migration between the HBM and host tiers.
+
+The control plane (`repro.serving.engine` / a placement policy) decides
+WHAT moves; this module executes a batch of moves inside jit with
+static shapes: both directions take fixed-size index arrays padded with
+-1 rows. Padded rows are routed to out-of-bounds indices and dropped by
+the scatter (`mode="drop"`) — NOT masked via gather+select, which would
+both read stale values and collide on duplicate clamped indices.
+
+On a real TPU the two pools live in different `memory_kind`s and XLA
+lowers the cross-pool scatter into DMA transfers over the host link —
+the M_i / M_o traffic of Eq. (3)/(4). The byte accounting used by the
+simulator and by the engine's telemetry matches 1:1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.paged import NO_SLOT, PagedKVCache
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MigrationPlan:
+    """Fixed-capacity migration batch. All arrays [M]; -1 rows are no-ops.
+
+    promote: host slot `src` -> hbm slot `dst` (page `logical`)
+    demote:  hbm slot `src`  -> host slot `dst`
+    Every entry also names the (layer, batch) coordinate.
+    """
+    pro_layer: jax.Array
+    pro_batch: jax.Array
+    pro_src: jax.Array      # host slot
+    pro_dst: jax.Array      # hbm slot
+    pro_logical: jax.Array
+    dem_layer: jax.Array
+    dem_batch: jax.Array
+    dem_src: jax.Array      # hbm slot
+    dem_dst: jax.Array      # host slot
+    dem_logical: jax.Array
+
+    @classmethod
+    def empty(cls, capacity: int) -> "MigrationPlan":
+        z = jnp.full((capacity,), -1, jnp.int32)
+        return cls(*([z] * 10))
+
+    @classmethod
+    def build(cls, capacity: int, promotes, demotes) -> "MigrationPlan":
+        """promotes/demotes: iterables of (layer, batch, src, dst, logical)."""
+        import numpy as np
+
+        def pack(rows):
+            arr = np.full((capacity, 5), -1, np.int32)
+            rows = list(rows)[:capacity]
+            if rows:
+                arr[: len(rows)] = np.asarray(rows, np.int32)
+            return [jnp.asarray(arr[:, i]) for i in range(5)]
+        return cls(*pack(promotes), *pack(demotes))
+
+    @property
+    def capacity(self) -> int:
+        return self.pro_layer.shape[0]
+
+
+def _oob(idx, ok, bound):
+    """Route masked rows out of bounds (dropped by mode='drop').
+    Sentinels must be OOB-HIGH: negative indices wrap NumPy-style."""
+    return jnp.where(ok, idx, jnp.int32(bound))
+
+
+def apply_migrations(cache: PagedKVCache,
+                     plan: MigrationPlan) -> PagedKVCache:
+    """Execute demotions then promotions. Shapes are static in `plan`."""
+    k_hbm, v_hbm = cache.k_hbm, cache.v_hbm
+    k_host, v_host = cache.k_host, cache.v_host
+    page_table = cache.page_table
+    hbm_owner, host_owner = cache.hbm_owner, cache.host_owner
+    L = k_hbm.shape[0]
+    hbm_pages = k_hbm.shape[2]
+    host_pages = k_host.shape[2]
+    max_pages = page_table.shape[2]
+
+    # ---- demote: HBM slot src -> host slot dst -----------------------------
+    ok = plan.dem_layer >= 0
+    l = _oob(plan.dem_layer, ok, L)
+    b = jnp.maximum(plan.dem_batch, 0)
+    src = jnp.minimum(jnp.maximum(plan.dem_src, 0), hbm_pages - 1)
+    dst = _oob(plan.dem_dst, ok, host_pages)
+    logical = _oob(plan.dem_logical, ok, max_pages)
+
+    l_read = jnp.minimum(l, L - 1)
+    page_k = k_hbm[l_read, b, src]                # [M, T, KH, HD]
+    page_v = v_hbm[l_read, b, src]
+    k_host = k_host.at[l, b, dst].set(page_k, mode="drop")
+    v_host = v_host.at[l, b, dst].set(page_v, mode="drop")
+    host_owner = host_owner.at[l, b, dst].set(
+        jnp.where(ok, logical, NO_SLOT), mode="drop")
+    hbm_owner = hbm_owner.at[l, b, _oob(plan.dem_src, ok, hbm_pages)].set(
+        jnp.full_like(src, NO_SLOT), mode="drop")
+    page_table = page_table.at[l, b, logical].set(
+        dst + hbm_pages, mode="drop")
+
+    # ---- promote: host slot src -> hbm slot dst ----------------------------
+    ok = plan.pro_layer >= 0
+    l = _oob(plan.pro_layer, ok, L)
+    b = jnp.maximum(plan.pro_batch, 0)
+    src = jnp.minimum(jnp.maximum(plan.pro_src, 0), host_pages - 1)
+    dst = _oob(plan.pro_dst, ok, hbm_pages)
+    logical = _oob(plan.pro_logical, ok, max_pages)
+
+    l_read = jnp.minimum(l, L - 1)
+    page_k = k_host[l_read, b, src]
+    page_v = v_host[l_read, b, src]
+    k_hbm = k_hbm.at[l, b, dst].set(page_k, mode="drop")
+    v_hbm = v_hbm.at[l, b, dst].set(page_v, mode="drop")
+    hbm_owner = hbm_owner.at[l, b, dst].set(
+        jnp.where(ok, logical, NO_SLOT), mode="drop")
+    host_owner = host_owner.at[l, b, _oob(plan.pro_src, ok, host_pages)] \
+        .set(jnp.full_like(src, NO_SLOT), mode="drop")
+    page_table = page_table.at[l, b, logical].set(dst, mode="drop")
+
+    return dataclasses.replace(
+        cache, k_hbm=k_hbm, v_hbm=v_hbm, k_host=k_host, v_host=v_host,
+        page_table=page_table, hbm_owner=hbm_owner, host_owner=host_owner)
+
+
+def migration_bytes(plan: MigrationPlan, page_bytes: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(M_i, M_o) bytes for Eq. (3)/(4) telemetry."""
+    m_i = jnp.sum(plan.pro_layer >= 0) * page_bytes
+    m_o = jnp.sum(plan.dem_layer >= 0) * page_bytes
+    return m_i, m_o

@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without real
+hardware: `jax.jit(step).lower(*ShapeDtypeStructs).compile()` under the
+production mesh forces GSPMD to produce a complete partitioned module
+— sharding mismatches, non-divisible layouts, OOM-at-compile and
+unsupported collectives all fail HERE. No arrays are ever allocated.
+
+Per cell we record: memory_analysis (per-device bytes), cost_analysis
+(FLOPs / bytes), and the collective-bytes breakdown parsed from the
+optimized HLO — the inputs to EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun                    # all cells, both meshes
+  python -m repro.launch.dryrun --arch qwen3-32b --shape decode_32k \
+      --mesh single                                # one cell, in-process
+  python -m repro.launch.dryrun --list             # enumerate cells
+
+Cells run as subprocesses (one fresh XLA per cell) so a failure or a
+compiler OOM never poisons the sweep; results append to
+dryrun_results.jsonl.
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+SUBQUADRATIC = {"xlstm-125m", "zamba2-1-2b", "zamba2-1.2b"}
+
+RESULTS = "dryrun_results.jsonl"
+
+
+def cells(archs=None, shapes=None):
+    from repro import configs
+    out = []
+    for arch in (archs or configs.all_arch_names()):
+        for shape in (shapes or SHAPES):
+            if shape == "long_500k" and arch not in SUBQUADRATIC:
+                out.append((arch, shape, "SKIP",
+                            "pure full-attention arch; sub-quadratic "
+                            "attention required at 524288 (DESIGN.md §4)"))
+                continue
+            out.append((arch, shape, "RUN", ""))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Spec builders (ShapeDtypeStruct only — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+
+    cfg = configs.get(arch)
+    seq, batch, kind = SHAPES[shape]
+    i32 = jnp.int32
+    specs = {}
+    if kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.frontend.num_embeddings, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.frontend.num_embeddings, cfg.d_model), cfg.dtype)
+    elif kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.frontend.num_embeddings, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.frontend.num_embeddings, cfg.d_model), cfg.dtype)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((batch,), i32)
+    return specs
+
+
+def _abstract_state(model, batch, context):
+    """Abstract decode state for the cell (ShapeDtypeStructs)."""
+    import jax
+    cfg = model.cfg
+    if cfg.family in ("dense", "vlm", "moe", "encdec", "hybrid"):
+        geo = model.cache_geometry(batch, context, hbm_fraction=0.25)
+    else:
+        geo = None
+    if cfg.family == "encdec":
+        state = jax.eval_shape(
+            lambda: {"kv": model.init_decode_state(batch, geo),
+                     "enc": jax.numpy.zeros(
+                         (batch, cfg.frontend.num_embeddings, cfg.d_model),
+                         cfg.dtype)})
+    else:
+        state = jax.eval_shape(lambda: model.init_decode_state(batch, geo))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.launch import shardings as shd
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import collective_bytes_of_hlo
+    from repro.models.model import Model
+    from repro.training.train_step import make_train_step, TrainState
+    from repro.training.optimizer import AdamWState
+
+    t0 = time.time()
+    cfg = configs.get(arch)
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    seq, batch, kind = SHAPES[shape]
+    specs = input_specs(arch, shape)
+
+    from repro.models import layers as layers_mod
+    layers_mod.set_activation_batch_axes(
+        shd.batch_axes(mesh, batch))
+    axes = model.logical_axes()
+    abstract = model.abstract_params()
+    mode = "train" if kind == "train" else "serve"
+    pshard = shd.param_shardings(axes, abstract, mesh, mode)
+    tok_shard = shd.tokens_sharding(mesh, batch)
+    rep = shd.replicated(mesh)
+
+    with mesh:
+        if kind == "train":
+            step = make_train_step(
+                model, extra_keys=tuple(k for k in specs if k != "tokens"))
+            opt_shard = AdamWState(step=rep, m=pshard, v=pshard)
+            state_shard = TrainState(params=pshard, opt=opt_shard)
+            state_abs = jax.eval_shape(
+                lambda p: TrainState(
+                    params=p,
+                    opt=AdamWState(
+                        step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(
+                            lambda a: jnp.zeros(a.shape, jnp.float32), p),
+                        v=jax.tree.map(
+                            lambda a: jnp.zeros(a.shape, jnp.float32), p))),
+                abstract)
+            batch_abs = dict(specs)
+            batch_shard = {k: (tok_shard if k == "tokens"
+                               else NamedSharding(
+                                   mesh, P(shd.batch_axes(mesh, batch),
+                                           None, None)))
+                           for k in specs}
+            fn = jax.jit(step,
+                         in_shardings=(state_shard, batch_shard),
+                         out_shardings=(state_shard, rep),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_abs, batch_abs)
+        elif kind == "prefill":
+            geo = model.cache_geometry(batch, seq, hbm_fraction=0.25)
+            extra_keys = tuple(k for k in specs if k != "tokens")
+
+            if cfg.family == "xlstm":
+                # recurrent arch: parallel (chunked) prompt scoring is
+                # the prefill analogue (DESIGN.md §6)
+                def pre(params, tokens):
+                    return model.forward_hidden(params, tokens)
+                out_shard = NamedSharding(
+                    mesh, P(shd.batch_axes(mesh, batch), None, None))
+            else:
+                def pre(params, tokens, *extra_vals):
+                    extra = dict(zip(extra_keys, extra_vals)) or None
+                    return model.prefill(params, tokens, geo, extra=extra)
+                state_abs = jax.eval_shape(
+                    lambda p, t, *e: model.prefill(
+                        p, t, geo, extra=dict(zip(extra_keys, e)) or None)[1],
+                    abstract, specs["tokens"],
+                    *[specs[k] for k in extra_keys])
+                out_shard = (shd.logits_sharding(mesh, cfg.vocab, batch),
+                             shd.state_shardings_for(model, state_abs, mesh))
+            in_sh = [pshard, tok_shard] + [
+                NamedSharding(mesh,
+                              P(shd.batch_axes(mesh, batch), None, None))
+                for _ in extra_keys]
+            fn = jax.jit(pre, in_shardings=tuple(in_sh),
+                         out_shardings=out_shard)
+            lowered = fn.lower(abstract, specs["tokens"],
+                               *[specs[k] for k in extra_keys])
+        else:  # decode
+            state_abs = _abstract_state(model, batch, seq)
+            state_shard = shd.state_shardings_for(model, state_abs, mesh)
+
+            def dec(params, state, token):
+                return model.decode_step(params, state, token)
+
+            tok_vec = NamedSharding(mesh, P(shd.batch_axes(mesh, batch)))
+            fn = jax.jit(dec,
+                         in_shardings=(pshard, state_shard, tok_vec),
+                         out_shardings=(
+                             shd.logits_sharding(mesh, cfg.vocab, batch),
+                             state_shard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(abstract, state_abs, specs["token"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from repro.launch.hlo_cost import analyze
+    weighted = analyze(hlo)   # trip-count-weighted (scan bodies x L)
+    n_dev = mesh.devices.size
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "devices": int(n_dev),
+        "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        # per-device module costs, trip-count weighted
+        "flops_per_device": float(weighted["flops"]),
+        "bytes_per_device": float(weighted["bytes"]),
+        "collective_bytes_per_device": weighted["collectives"],
+        # XLA's own (unweighted) numbers, for reference
+        "xla_flops": float(cost.get("flops", -1)),
+        "xla_bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": collective_bytes_of_hlo(hlo),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+        "seq": seq, "batch": batch, "kind": kind,
+    }
+    return result
+
+
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh process")
+    args = ap.parse_args()
+
+    todo = cells([args.arch] if args.arch else None,
+                 [args.shape] if args.shape else None)
+    if args.list:
+        for c in todo:
+            print(*c)
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    single_cell = args.arch and args.shape and len(meshes) == 1
+
+    if single_cell and not args.subprocess:
+        arch, shape, status, why = todo[0]
+        if status == "SKIP":
+            print(json.dumps({"arch": arch, "shape": shape,
+                              "mesh": meshes[0], "status": "skip",
+                              "reason": why}))
+            return
+        res = run_cell(arch, shape, meshes[0])
+        print(json.dumps(res))
+        return
+
+    # sweep: one subprocess per cell, appending to the results file
+    with open(args.out, "a") as out:
+        for arch, shape, status, why in todo:
+            for mesh_kind in meshes:
+                if status == "SKIP":
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "skip", "reason": why}
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--mesh", mesh_kind]
+                t0 = time.time()
+                proc = subprocess.run(cmd, capture_output=True, text=True,
+                                      timeout=3600)
+                if proc.returncode == 0 and proc.stdout.strip():
+                    line = proc.stdout.strip().splitlines()[-1]
+                    out.write(line + "\n")
+                    print(f"OK   {arch} {shape} {mesh_kind} "
+                          f"({time.time()-t0:.0f}s)")
+                else:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "fail",
+                           "stderr": proc.stderr[-2000:]}
+                    out.write(json.dumps(rec) + "\n")
+                    print(f"FAIL {arch} {shape} {mesh_kind}: "
+                          f"{proc.stderr[-300:]}")
+                out.flush()
+
+
+if __name__ == "__main__":
+    main()

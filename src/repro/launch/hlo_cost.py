@@ -1,0 +1,392 @@
+"""Trip-count-weighted cost analysis over optimized HLO text.
+
+XLA's built-in `compiled.cost_analysis()` visits a `while` body ONCE, so
+any scanned-layers model under-reports FLOPs/bytes by ~num_layers x and
+collectives inside the scan are similarly under-counted. The optimized
+HLO carries `backend_config={"known_trip_count":{"n":...}}`, so this
+module re-derives costs with proper weighting:
+
+  cost(while)  = n * (cost(body) + cost(cond))
+  cost(fusion) = flops(called computation)
+                 + bytes(fusion operands + outputs)      # fusion boundary
+  cost(dot)    = 2 * prod(out) * prod(lhs contracting dims)
+  bytes(op)    = operands + outputs, with in-place special cases
+                 (dynamic-update-slice counts only the written window)
+
+Collective bytes are weighted the same way (a per-layer all-reduce in a
+64-layer scan counts 64x), fixing the §Roofline collective term.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_ELTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "negate",
+    "compare", "select", "and", "or", "xor", "abs", "floor", "cosine",
+    "sine", "logistic",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) across all tensors in a shape string."""
+    elems = 0
+    byts = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = re.search(r"\w+\[([\d,]*)\]", shape_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "operands", "line")
+
+    def __init__(self, name, shape, op, operands, line):
+        self.name = name
+        self.shape = shape
+        self.op = op
+        self.operands = operands
+        self.line = line
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/ ]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+
+
+def parse_module(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = re.sub(r"/\*.*?\*/", "", line).rstrip()
+        is_header = (stripped.endswith("{") and "->" in stripped
+                     and "=" not in stripped.split("->")[0])
+        if is_header:
+            hm = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if hm:
+                cur = hm.group(1)
+                comps[cur] = []
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, op, rest = m.groups()
+            # operands: %refs before any attr like ), key=...
+            args_part = rest.split("), ")[0]
+            operands = _OPERAND_RE.findall(args_part)
+            comps[cur].append(Instr(name, shape.strip(), op, operands, line))
+    return comps
+
+
+class CostResult(dict):
+    pass
+
+
+def _root_of(instrs: List[Instr]) -> Optional[Instr]:
+    for i in instrs:
+        if "ROOT" in i.line.split("=")[0] or i.line.lstrip().startswith(
+                "ROOT"):
+            return i
+    return instrs[-1] if instrs else None
+
+
+def _fusion_bytes(ins: Instr, table, comps, symtab, called,
+                  project: bool) -> float:
+    """Boundary bytes for a fusion/call instruction.
+
+    * output: full, unless the fused root is a dynamic-update-slice
+      (charge the written window — scan write-back) or, in `project`
+      mode, a pure dtype convert (free on TPU: converts fuse into the
+      MXU/VPU producers and never round-trip HBM).
+    * operands: parameters consumed only via (dynamic-)slice are charged
+      at slice size (scan bodies slice one layer of stacked tensors);
+      the DUS target parameter is charged via the root rule; in
+      `project` mode convert-only uses are free.
+    """
+    fused = next((c for c in called if c in comps), None)
+    out_bytes = _shape_elems_bytes(ins.shape)[1]
+    param_charge = {}
+    dus_target_pos = []
+    if fused is not None:
+        params = [i for i in comps[fused] if i.op == "parameter"]
+        pname_by_pos = {}
+        for p in params:
+            pm = re.search(r"parameter\((\d+)\)", p.line)
+            if pm:
+                pname_by_pos[int(pm.group(1))] = p.name
+        pos_by_name = {v: k for k, v in pname_by_pos.items()}
+        uses: Dict[str, List[Instr]] = {}
+        for i in comps[fused]:
+            for o in i.operands:
+                uses.setdefault(o, []).append(i)
+        ftab = symtab[fused]
+        by_name = {i.name: i for i in comps[fused]}
+        dus_target_pos = []
+        root = _root_of(comps[fused])
+
+        def _dus_out_bytes(dus: Instr) -> float:
+            upd = dus.operands[1] if len(dus.operands) > 1 else None
+            ub = _shape_elems_bytes(ftab.get(upd, ""))[1] if upd else 0.0
+            if dus.operands and dus.operands[0] in pos_by_name:
+                dus_target_pos.append(pos_by_name[dus.operands[0]])
+            return 2.0 * ub
+
+        if root is not None and root.op == "dynamic-update-slice":
+            out_bytes = _dus_out_bytes(root)
+        elif root is not None and root.op == "tuple":
+            # multi-output fusion (e.g. scan write-backs of several
+            # stacked tensors): charge each DUS element at its window
+            total = 0.0
+            for o in root.operands:
+                elem = by_name.get(o)
+                if elem is not None and elem.op == "dynamic-update-slice":
+                    total += _dus_out_bytes(elem)
+                elif elem is not None and project and elem.op == "convert":
+                    pass
+                else:
+                    total += _shape_elems_bytes(
+                        ftab.get(o, ""))[1]
+            out_bytes = total
+        elif project and root is not None and root.op == "convert":
+            out_bytes = 0.0
+        for pos, pname in pname_by_pos.items():
+            us = uses.get(pname, [])
+            if not us:
+                param_charge[pos] = 0.0
+            elif all(u.op in ("dynamic-slice", "slice", "gather")
+                     for u in us):
+                param_charge[pos] = sum(
+                    _shape_elems_bytes(u.shape)[1] for u in us)
+            elif project and all(u.op == "convert" for u in us):
+                param_charge[pos] = 0.0
+        for pos in dus_target_pos:
+            param_charge[pos] = 0.0
+
+    total = out_bytes
+    for pos, o in enumerate(ins.operands):
+        if o not in table:
+            continue
+        full = _shape_elems_bytes(table[o])[1]
+        total += min(param_charge.get(pos, full), full)
+    return total
+
+
+def analyze(hlo: str, detail: bool = False,
+            project: bool = True) -> dict:
+    comps = parse_module(hlo)
+    # symbol tables per computation (name -> shape string)
+    symtab = {c: {i.name: i.shape for i in instrs}
+              for c, instrs in comps.items()}
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+    details: List[Tuple[float, str, str, str]] = []
+
+    def comp_cost(cname: str) -> Tuple[float, float, Dict[str, float]]:
+        if cname in memo:
+            return memo[cname]
+        flops = 0.0
+        byts = 0.0
+        coll = {k: 0.0 for k in _COLL_OPS}
+        if cname not in comps:
+            memo[cname] = (0.0, 0.0, coll)
+            return memo[cname]
+        # prevent infinite recursion on malformed input
+        memo[cname] = (0.0, 0.0, dict(coll))
+        table = symtab[cname]
+
+        def operand_bytes(instr: Instr) -> float:
+            total = 0.0
+            for o in instr.operands:
+                if o in table:
+                    total += _shape_elems_bytes(table[o])[1]
+            return total
+
+        for ins in comps[cname]:
+            out_elems, out_bytes = _shape_elems_bytes(ins.shape)
+            op = ins.op
+            if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "iota"):
+                continue
+            if op == "while":
+                n = 1
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    n = int(tm.group(1))
+                called = _CALLED_RE.findall(ins.line)
+                for c in called:
+                    f, b, cl = comp_cost(c)
+                    flops += n * f
+                    byts += n * b
+                    for k in _COLL_OPS:
+                        coll[k] += n * cl[k]
+                continue
+            if op in ("fusion", "call", "custom-call", "conditional",
+                      "async-start", "map"):
+                called = _CALLED_RE.findall(ins.line)
+                for c in called:
+                    f, b, cl = comp_cost(c)
+                    flops += f
+                    for k in _COLL_OPS:
+                        coll[k] += cl[k]
+                # boundary bytes (slice-aware, DUS-aware, projected)
+                byts += _fusion_bytes(ins, table, comps, symtab, called,
+                                      project)
+                continue
+            if op in _COLL_OPS:
+                factor = 2.0 if op == "all-reduce" else 1.0
+                coll[op] += factor * out_bytes
+                byts += out_bytes + operand_bytes(ins)
+                continue
+            if op == "dot":
+                k = 1.0
+                lhs_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                  ins.line)
+                if lhs_m and ins.operands:
+                    lhs_shape = table.get(ins.operands[0], "")
+                    dims = _dims_of(lhs_shape)
+                    if dims:
+                        for di in lhs_m.group(1).split(","):
+                            if di != "" and int(di) < len(dims):
+                                k *= dims[int(di)]
+                # batch dims are part of output already
+                flops += 2.0 * out_elems * k
+                byts += out_bytes + operand_bytes(ins)
+                continue
+            if op == "convolution":
+                # rough: 2 * out_elems * kernel_elems / out_features
+                ker = (_shape_elems_bytes(table.get(ins.operands[1], ""))[0]
+                       if len(ins.operands) > 1 else 1)
+                dims = _dims_of(ins.shape)
+                ofeat = dims[-1] if dims else 1
+                flops += 2.0 * out_elems * max(ker / max(ofeat, 1), 1.0)
+                byts += out_bytes + operand_bytes(ins)
+                continue
+            if op == "dynamic-update-slice":
+                # in-place: only the written window moves
+                upd = (_shape_elems_bytes(table.get(ins.operands[1], ""))[1]
+                       if len(ins.operands) > 1 else out_bytes)
+                byts += 2.0 * upd
+                continue
+            if op in ("dynamic-slice", "gather"):
+                byts += 2.0 * out_bytes
+                continue
+            if op == "scatter":
+                upd = (_shape_elems_bytes(table.get(ins.operands[2], ""))[1]
+                       if len(ins.operands) > 2 else out_bytes)
+                byts += 2.0 * upd
+                continue
+            if op == "convert" and project:
+                continue
+            if op in ("copy", "convert", "reshape", "transpose", "broadcast",
+                      "slice", "concatenate", "pad", "reverse",
+                      "reduce", "reduce-window", "sort", "select-and-scatter",
+                      "copy-start", "copy-done"):
+                byts += out_bytes + operand_bytes(ins)
+                if op == "reduce":
+                    flops += operand_bytes(ins) / 4.0   # ~1 flop/elem
+                continue
+            if op in _ELTWISE_FLOP_OPS:
+                flops += out_elems
+                byts += out_bytes + operand_bytes(ins)
+                continue
+            # default: count bytes only
+            byts += out_bytes + operand_bytes(ins)
+
+        total_coll = sum(coll.values())
+        coll_out = dict(coll)
+        coll_out["total"] = total_coll
+        memo[cname] = (flops, byts, coll_out)
+        return memo[cname]
+
+    # entry computation: the one whose header had ENTRY, else heuristic
+    entry = None
+    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if em:
+        entry = em.group(1)
+    else:
+        entry = max(comps, key=lambda c: len(comps[c]))
+    flops, byts, coll = comp_cost(entry)
+    out = {"flops": flops, "bytes": byts, "collectives": coll,
+           "entry": entry, "num_computations": len(comps)}
+    if detail:
+        # weight per computation via call-graph walk from entry
+        weights: Dict[str, float] = {entry: 1.0}
+        order = [entry]
+        seen = {entry}
+        while order:
+            cname = order.pop(0)
+            w = weights.get(cname, 0.0)
+            for ins in comps.get(cname, []):
+                called = _CALLED_RE.findall(ins.line)
+                n = 1
+                if ins.op == "while":
+                    tm = _TRIP_RE.search(ins.line)
+                    n = int(tm.group(1)) if tm else 1
+                for c in called:
+                    weights[c] = weights.get(c, 0.0) + w * n
+                    if c not in seen and c in comps:
+                        seen.add(c)
+                        order.append(c)
+        rows = []
+        for cname, instrs in comps.items():
+            w = weights.get(cname, 0.0)
+            if w == 0:
+                continue
+            table = symtab[cname]
+            for ins in instrs:
+                if ins.op in ("parameter", "constant", "tuple",
+                              "get-tuple-element", "bitcast", "iota"):
+                    continue
+                ob = _shape_elems_bytes(ins.shape)[1]
+                if ins.op in ("fusion", "call", "custom-call"):
+                    called = _CALLED_RE.findall(ins.line)
+                    b = _fusion_bytes(ins, table, comps, symtab, called,
+                                      project)
+                elif ins.op == "dynamic-update-slice":
+                    b = 2 * (_shape_elems_bytes(
+                        table.get(ins.operands[1], ""))[1]
+                        if len(ins.operands) > 1 else ob)
+                elif ins.op in ("dynamic-slice", "gather"):
+                    b = 2 * ob
+                elif ins.op == "while":
+                    continue
+                else:
+                    b = ob + sum(_shape_elems_bytes(table.get(o, ""))[1]
+                                 for o in ins.operands)
+                rows.append((w * b, w, cname, ins.op, ins.shape[:70],
+                             ins.name[:45]))
+        rows.sort(reverse=True)
+        out["top_instructions"] = rows[:25]
+    return out

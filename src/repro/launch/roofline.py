@@ -1,0 +1,156 @@
+"""Roofline-term derivation from the compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell — all in seconds:
+
+  compute    = HLO_FLOPs   / (chips * peak_FLOP/s)      [197 TF bf16/chip]
+  memory     = HLO_bytes   / (chips * HBM_bw)           [819 GB/s/chip]
+  collective = coll_bytes  / (chips * link_bw)          [~50 GB/s/link]
+
+HLO_FLOPs / HLO_bytes come from `compiled.cost_analysis()`.
+collective_bytes is NOT in cost_analysis: we parse the optimized HLO
+and sum the output-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (output bytes ~= data
+moved per chip for these ops; a documented upper bound for all-reduce
+which moves 2x in ring form — noted in EXPERIMENTS.md).
+
+Also derives MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs that exposes remat/dispatch
+waste.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List
+
+from repro.core.tiers import TPU_V5E_CHIP
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# matches e.g. "  %x = bf16[16,512]{1,0} all-gather(...)" and tuple results
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLL_OPS) + r")[\s(]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_of_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum output bytes per collective op kind over the optimized HLO."""
+    out = {k: 0.0 for k in _COLL_OPS}
+    out["total"] = 0.0
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        kind = m.group(2)
+        # ring all-reduce moves ~2x the buffer; count it as 2x so the
+        # collective term is not optimistic for the dominant op
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += b * factor
+        out["total"] += b * factor
+    return out
+
+
+def roofline_terms(rec: dict, chip=TPU_V5E_CHIP) -> dict:
+    """rec: one dryrun_results.jsonl record -> roofline terms (seconds).
+
+    flops/bytes/collectives are PER-DEVICE module costs (the SPMD module
+    is per-device), trip-count weighted by repro.launch.hlo_cost."""
+    n = rec["devices"]
+    flops = rec["flops_per_device"]
+    bytes_acc = rec["bytes_per_device"]
+    coll = rec["collective_bytes_per_device"]["total"]
+    compute_s = flops / chip.peak_flops_bf16
+    memory_s = bytes_acc / chip.hbm_bw
+    collective_s = coll / chip.ici_bw
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+
+    # MODEL_FLOPS: 6ND for training, 2ND per generated/processed token
+    # for inference (forward only)
+    n_active = rec["active_params"]
+    tokens = rec["batch"] * (rec["seq"] if rec["kind"] != "decode" else 1)
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * n_active * tokens          # global useful FLOPs
+    useful = (model_flops / n) / flops if flops > 0 else 0.0
+
+    bound_s = max(compute_s, memory_s, collective_s)
+    roofline_fraction = (model_flops / (n * chip.peak_flops_bf16)) / bound_s \
+        if bound_s > 0 else 0.0
+
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": roofline_fraction,
+    }
+
+
+def load_results(path: str = "dryrun_results.jsonl") -> List[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    # keep last record per cell
+    dedup = {}
+    for r in out:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def table(path: str = "dryrun_results.jsonl") -> str:
+    rows = []
+    header = (f"{'arch':26s} {'shape':12s} {'mesh':6s} {'dom':10s} "
+              f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+              f"{'useful':>7s} {'roofl%':>7s}")
+    rows.append(header)
+    rows.append("-" * len(header))
+    for r in sorted(load_results(path),
+                    key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("status") != "ok":
+            rows.append(f"{r['arch']:26s} {r['shape']:12s} "
+                        f"{r.get('mesh', '-'):6s} {r['status'].upper()}"
+                        + (f" ({r.get('reason', '')[:60]})"
+                           if r.get("reason") else ""))
+            continue
+        t = roofline_terms(r)
+        rows.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{t['dominant']:10s} {t['compute_s']:10.2e} "
+            f"{t['memory_s']:10.2e} {t['collective_s']:10.2e} "
+            f"{t['useful_flops_ratio']:7.2f} "
+            f"{100 * t['roofline_fraction']:6.1f}%")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"))

@@ -1,0 +1,196 @@
+"""Logical-axis -> mesh-axis sharding rules (divisibility-aware).
+
+One rules engine covers every architecture. Per parameter, each mesh
+axis claims at most one tensor dim, chosen by a priority list over the
+logical axis names, skipping dims whose size is not divisible by the
+mesh axis (GSPMD supports uneven shardings via padding, but divisible
+placements avoid the padding waste — the non-divisible cases, e.g.
+llama4's 40 heads or granite-moe's 40 experts on a 16-way model axis,
+fall through to the next-priority dim and are called out in
+EXPERIMENTS.md §Roofline as hillclimb candidates).
+
+Modes:
+  train — TP over `model` + FSDP over `data` (embed dim), batch over
+          (`pod`, `data`);
+  serve — TP over `model`, params replicated over `data`/`pod`, batch
+          over `data` (and `pod` when multi-pod).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# priority of logical names for the model (TP/EP) axis
+_MODEL_PRIORITY = ("experts", "heads", "kv_heads", "mlp", "vocab",
+                   "head_dim", "embed")
+# priority for the data (FSDP) axis — train mode only
+_FSDP_PRIORITY = ("embed", "vocab", "mlp")
+
+
+def _pick_dim(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+              priority, mesh_size: int, taken: set) -> Optional[int]:
+    for name in priority:
+        for dim, ax in enumerate(axes):
+            if ax == name and dim not in taken and \
+                    shape[dim] % mesh_size == 0 and shape[dim] >= mesh_size:
+                return dim
+    return None
+
+
+def param_pspec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                mesh: Mesh, mode: str = "train") -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = [None] * len(shape)
+    taken: set = set()
+    if "model" in sizes and sizes["model"] > 1:
+        d = _pick_dim(axes, shape, _MODEL_PRIORITY, sizes["model"], taken)
+        if d is not None:
+            spec[d] = "model"
+            taken.add(d)
+    if mode == "train" and "data" in sizes and sizes["data"] > 1:
+        d = _pick_dim(axes, shape, _FSDP_PRIORITY, sizes["data"], taken)
+        if d is not None:
+            spec[d] = "data"
+            taken.add(d)
+    return P(*spec)
+
+
+def param_shardings(schema_axes: Any, abstract: Any, mesh: Mesh,
+                    mode: str = "train") -> Any:
+    """Map trees of (logical axes, ShapeDtypeStruct) -> NamedSharding."""
+    def one(axes, leaf):
+        return NamedSharding(mesh, param_pspec(axes, leaf.shape, mesh, mode))
+    return jax.tree.map(one, schema_axes, abstract,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / state shardings
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, batch: Optional[int] = None) -> Tuple[str, ...]:
+    """Batch mesh axes, dropped entirely when the batch is too small to
+    shard (e.g. long_500k's global_batch=1 replicates over data)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if batch % total != 0 or batch < total:
+            return ()
+    return axes
+
+
+def tokens_sharding(mesh: Mesh, batch: Optional[int] = None
+                    ) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_axes(mesh, batch), None))
+
+
+def logits_sharding(mesh: Mesh, vocab: int,
+                    batch: Optional[int] = None) -> NamedSharding:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    v = "model" if vocab % sizes.get("model", 1) == 0 else None
+    return NamedSharding(mesh, P(batch_axes(mesh, batch), v))
+
+
+def _kv_shard_axis(geo, mesh: Mesh) -> str:
+    """Which pool dim carries the model axis.
+
+    kv_heads when divisible (classic TP);
+    otherwise PAGES — the LSE merge over pages is associative, so
+    page-sharding is exact sequence-parallel attention and keeps every
+    chip busy even when kv_heads < model parallelism (llama4/qwen3-class
+    GQA with kv=8 on a 16-way axis). Geometry pads pool sizes to 16.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    if geo.kv_heads % m == 0:
+        return "kv_heads"
+    if geo.hbm_pages % m == 0 and geo.host_pages % m == 0:
+        return "pages"
+    return "none"
+
+
+def cache_shardings(geo, mesh: Mesh) -> Any:
+    """Shardings for a PagedKVCache pytree.
+
+    Pools [L, B, P, T, KH, HD]: batch over data(/pod); model axis on
+    kv_heads or pages per `_kv_shard_axis`. Owner/valid tables follow
+    the pools' pages dim so tier_lists stays fully local.
+    """
+    from repro.kvcache.paged import PagedKVCache
+    b_ax = batch_axes(mesh, getattr(geo, "batch", None))
+    ax = _kv_shard_axis(geo, mesh)
+    kh = "model" if ax == "kv_heads" else None
+    pg = "model" if ax == "pages" else None
+    pool = NamedSharding(mesh, P(None, b_ax, pg, None, kh, None))
+    owner = NamedSharding(mesh, P(None, b_ax, pg))
+    table = NamedSharding(mesh, P(None, b_ax, None))
+    vec = NamedSharding(mesh, P(b_ax))
+    return PagedKVCache(
+        k_hbm=pool, v_hbm=pool, k_host=pool, v_host=pool,
+        page_table=table, hbm_owner=owner, host_owner=owner,
+        length=vec, importance=table)
+
+
+def ssm_state_shardings(state: Any, mesh: Mesh) -> Any:
+    """Recurrent states: batch over data; heads over model if divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+
+    def one(leaf):
+        # state leaves are [L, B, ...]; try to shard a trailing dim on
+        # model if divisible
+        b_ax = batch_axes(mesh, leaf.shape[1] if leaf.ndim > 1 else None)
+        spec = [None, b_ax] + [None] * (leaf.ndim - 2)
+        for dim in range(2, leaf.ndim):
+            if leaf.shape[dim] % m == 0 and leaf.shape[dim] >= m:
+                spec[dim] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, state)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def state_shardings_for(model, state_abs: Any, mesh: Mesh) -> Any:
+    """Shardings matching Model.init_decode_state / prefill output."""
+    from repro.kvcache.paged import PagedKVCache
+    if isinstance(state_abs, PagedKVCache):
+        geo = _geo_of(model, state_abs)
+        return cache_shardings(geo, mesh)
+    if isinstance(state_abs, dict):
+        out = {}
+        for k, v in state_abs.items():
+            if k == "kv":
+                out[k] = cache_shardings(_geo_of(model, v), mesh)
+            elif k == "enc":
+                out[k] = NamedSharding(
+                    mesh, P(batch_axes(mesh, v.shape[0]), None, None))
+            else:
+                out[k] = ssm_state_shardings(v, mesh)
+        return out
+    return ssm_state_shardings(state_abs, mesh)
+
+
+def _geo_of(model, cache_abs):
+    """Recover a geometry-like view from an abstract cache."""
+    import dataclasses
+
+    @dataclasses.dataclass
+    class _G:
+        kv_heads: int
+        head_dim: int
+        hbm_pages: int
+        host_pages: int
+        batch: int
+    L, B, Ph, T, KH, HD = cache_abs.k_hbm.shape
+    return _G(kv_heads=KH, head_dim=HD, hbm_pages=Ph,
+              host_pages=cache_abs.k_host.shape[2], batch=B)

@@ -1,0 +1,174 @@
+"""Architecture configuration — one dataclass drives every family.
+
+A `ModelConfig` fully determines parameter schema, forward pass, cache
+kind and sharding. The ten assigned architectures are instantiated in
+`repro.configs.<id>` from public-literature values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    #: apply MoE every `interleave`-th layer (1 = every layer); other
+    #: layers use a dense FFN of size d_ff.
+    interleave: int = 1
+    capacity_factor: float = 1.25
+    #: llama4-style always-on shared expert (same size as one expert)
+    shared_expert: bool = False
+    #: pad the PHYSICAL expert count up to this multiple so experts
+    #: divide the model mesh axis (EP). Padded experts are masked out
+    #: of routing — the logical model is unchanged. §Perf iteration M1:
+    #: granite-moe's 40 experts pad to 48 on a 16-way axis.
+    pad_experts_to: int = 0
+    #: token-group size for capacity dispatch; the [G, S, E, C] dispatch
+    #: tensor scales with S*C ~ group^2/E — §Perf iteration M2 knob.
+    group_size: int = 1024
+
+    @property
+    def num_experts_padded(self) -> int:
+        if self.pad_experts_to <= 0:
+            return self.num_experts
+        p = self.pad_experts_to
+        return -(-self.num_experts // p) * p
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64          # N: per-channel state size (Mamba2)
+    conv_width: int = 4
+    expand: int = 2              # inner dim = expand * d_model
+    chunk: int = 128             # chunked-scan block length
+    #: hybrid (zamba2): apply a weight-shared attention block every
+    #: `attn_every` SSM blocks; 0 disables attention entirely.
+    attn_every: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    #: every `slstm_every`-th block is an sLSTM block, the rest mLSTM
+    slstm_every: int = 4
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    enc_layers: int
+    #: encoder input length (frames after the stubbed conv frontend)
+    enc_positions: int = 1500
+    #: learned decoder position table size (>= longest decode shape)
+    dec_positions: int = 40960
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendStub:
+    """Modality frontend stub: input_specs() provides precomputed
+    frame/patch embeddings of shape [batch, num_embeddings, d_model]."""
+    kind: str                    # "audio" | "vision"
+    num_embeddings: int          # frames or patches
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | encdec | vlm | ssm | xlstm | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: jnp.dtype = jnp.bfloat16
+    param_dtype: jnp.dtype = jnp.bfloat16
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    frontend: Optional[FrontendStub] = None
+    #: KV page size in tokens for the two-tier paged cache
+    kv_page_tokens: int = 16
+    #: supports O(sub-quadratic) decode at 500k context
+    subquadratic: bool = False
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.num_heads)
+        assert self.num_heads % max(self.kv_heads, 1) == 0
+
+    # --- derived sizes -----------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.kv_heads
+
+    def kv_bytes_per_token_layer(self, dtype_bytes: int = 2) -> int:
+        return 2 * self.kv_heads * self.head_dim * dtype_bytes
+
+    def attention_layer_ids(self) -> Tuple[int, ...]:
+        """Layers that own a KV cache (hybrid archs: only shared-attn sites)."""
+        if self.family in ("ssm", "xlstm"):
+            return ()
+        if self.family == "hybrid":
+            assert self.ssm is not None and self.ssm.attn_every > 0
+            return tuple(range(self.ssm.attn_every - 1, self.num_layers,
+                               self.ssm.attn_every))
+        return tuple(range(self.num_layers))
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6ND roofline maths)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.num_layers
+        h, kh, hd = self.num_heads, self.kv_heads, self.head_dim
+        attn = d * h * hd + 2 * d * kh * hd + h * hd * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("ssm", "xlstm"):
+            inner = (self.ssm.expand if self.ssm else
+                     self.xlstm.expand) * d
+            blk = 2 * d * inner + inner * d + inner * 8  # rough
+            return L * blk + emb
+        mlp = 3 * d * f
+        if self.moe:
+            moe_layers = len(range(self.moe.interleave - 1, L,
+                                   self.moe.interleave))
+            dense_layers = L - moe_layers
+            moe_mlp = moe_layers * (self.moe.num_experts * 3 * d * f
+                                    + d * self.moe.num_experts
+                                    + (3 * d * f if self.moe.shared_expert
+                                       else 0))
+            body = L * attn + dense_layers * mlp + moe_mlp
+        elif self.family == "hybrid":
+            n_attn = len(self.attention_layer_ids())
+            inner = self.ssm.expand * d
+            ssm_blk = 2 * d * inner + inner * d
+            body = (L * ssm_blk + n_attn * 0  # shared attn counted once
+                    + attn + mlp)
+        else:
+            body = L * (attn + mlp)
+        if self.encdec:
+            body += self.encdec.enc_layers * (attn + mlp) + L * attn  # cross
+        return body + emb
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        full = self.param_count()
+        moe_layers = len(range(self.moe.interleave - 1, L,
+                               self.moe.interleave))
+        all_experts = moe_layers * self.moe.num_experts * 3 * d * f
+        active_experts = moe_layers * self.moe.top_k * 3 * d * f
+        return full - all_experts + active_experts

@@ -1,0 +1,199 @@
+"""Core pure-JAX layer ops shared by every architecture family.
+
+Everything is a plain function over arrays — no module framework. The
+memory-hungry paths (prefill/train attention) have a chunked
+flash-style implementation so the lowered graph never materializes an
+[S, S] score matrix; this is also the reference semantics for the
+Pallas flash kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# Activation-batch sharding constraints.
+#
+# Under FSDP the parameters are sharded on the embed dim over `data`;
+# without explicit constraints GSPMD propagates that into activations
+# and REPLICATES the batch dim instead (16x redundant attention compute,
+# observed in the train_4k dry-run — EXPERIMENTS.md §Perf). The launch
+# layer sets the batch mesh axes here; model code pins the batch dim of
+# layer inputs. No-op when unset (tests, single-device).
+# ---------------------------------------------------------------------------
+
+_ACT_BATCH_AXES = None
+
+
+def set_activation_batch_axes(axes) -> None:
+    global _ACT_BATCH_AXES
+    _ACT_BATCH_AXES = tuple(axes) if axes else None
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim0 of an activation to the configured batch mesh axes."""
+    if _ACT_BATCH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(_ACT_BATCH_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * w
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dtype) * w + b
+
+
+# --- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e6) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- activations ------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, w_out: jax.Array) -> jax.Array:
+    return jnp.einsum("...f,fd->...d",
+                      jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in)),
+                      w_out)
+
+
+# --- attention (full-sequence paths: train / prefill) -----------------------
+
+def repeat_kv(x: jax.Array, q_per_kv: int) -> jax.Array:
+    """[B, S, KH, D] -> [B, S, KH*q_per_kv, D]."""
+    if q_per_kv == 1:
+        return x
+    b, s, kh, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kh, q_per_kv, d))
+    return x.reshape(b, s, kh * q_per_kv, d)
+
+
+def naive_attention(q, k, v, *, causal: bool = True,
+                    q_offset: int = 0) -> jax.Array:
+    """Reference attention. q: [B,Sq,H,D], k/v: [B,Sk,H,D]."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool = True, q_chunk: int = 512,
+                        k_chunk: int = 1024, q_offset: int = 0) -> jax.Array:
+    """Chunked online-softmax attention; never materializes [Sq, Sk].
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, H, D] (same H — repeat GQA before).
+    Memory: O(q_chunk * k_chunk) scores per (batch, head).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    sq_real, sk_real = sq, sk
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    # pad to chunk multiples; padded K positions are masked out below,
+    # padded Q rows are computed and truncated.
+    pad_q = (-sq) % q_chunk
+    pad_k = (-sk) % k_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        sk += pad_k
+    scale = d ** -0.5
+
+    nk = sk // k_chunk
+    # Single scan over KV chunks with the FULL q resident: one loop level
+    # keeps GSPMD sharding propagation intact (a nested map-over-q-chunks
+    # made the partitioner replicate the batch dim of the score tensor —
+    # 16x redundant compute; see EXPERIMENTS.md §Perf). Live memory is
+    # one [B, H, Sq, k_chunk] score block.
+    qbh = q.transpose(0, 2, 1, 3)                       # [B,H,Sq,D]
+    kc = k.reshape(b, nk, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        ki, k_blk, v_blk = inputs                       # [B,H,kc,D]
+        s = jnp.einsum("bhqd,bhkd->bhqk", qbh, k_blk) \
+               .astype(jnp.float32) * scale
+        kpos = ki * k_chunk + jnp.arange(k_chunk)
+        mask = kpos[None, :] < sk_real                  # padded K invisible
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(jnp.broadcast_to(mask, s.shape[2:])[None, None],
+                      s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nk), kc, vc))
+    out = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
+    out = out.transpose(0, 2, 1, 3)                     # [B,Sq,H,D]
+    return out[:, :sq_real]
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+              flash_threshold: int = 2048) -> jax.Array:
+    """Dispatch: small sequences use the naive path (cheap on CPU tests),
+    long sequences the chunked flash path (bounded memory when lowered)."""
+    if q.shape[1] * k.shape[1] <= flash_threshold ** 2:
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+    return flash_attention_jnp(q, k, v, causal=causal, q_offset=q_offset)

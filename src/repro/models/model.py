@@ -1,0 +1,721 @@
+"""Unified model facade over all architecture families.
+
+`Model(cfg)` exposes:
+  schema()            parameter schema (init / abstract / logical axes)
+  init(rng)           concrete params
+  abstract_params()   ShapeDtypeStructs (dry-run, no allocation)
+  forward(params, batch)              full-sequence logits (train/score)
+  prefill(params, batch, geo)         logits + decode state
+  decode_step(params, state, token, [write_slot])  one-token serve step
+
+Decode state kinds:
+  attention families  -> PagedKVCache (two-tier, paper's technique)
+  ssm/xlstm           -> stacked recurrent states (pinned-HBM, §6)
+  hybrid              -> (ssm states, PagedKVCache over shared-attn sites)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.paged import (
+    CacheGeometry, PagedKVCache, init_cache, prefill_cache,
+)
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import (
+    Param, abstract_params, init_params, logical_axes,
+)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ #
+    # schema / params
+    # ------------------------------------------------------------------ #
+    def schema(self):
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            return tfm.dense_schema(cfg)
+        if fam == "moe":
+            return self._moe_schema()
+        if fam == "encdec":
+            return tfm.encdec_schema(cfg)
+        if fam == "xlstm":
+            return self._xlstm_schema()
+        if fam in ("ssm", "hybrid"):
+            return self._hybrid_schema()
+        raise ValueError(fam)
+
+    def _moe_schema(self):
+        cfg = self.cfg
+        il = cfg.moe.interleave
+        assert il in (1, 2), "interleave 1 or 2 supported"
+        if il == 1:
+            layers = {**tfm.attn_schema(cfg, cfg.num_layers),
+                      **moe_mod.moe_schema(cfg, cfg.num_layers)}
+        else:
+            nb = cfg.num_layers // 2
+            layers = {
+                "dense_attn": tfm.attn_schema(cfg, nb),
+                "dense_mlp": tfm.mlp_schema(cfg, nb),
+                "moe_attn": tfm.attn_schema(cfg, nb),
+                "moe": moe_mod.moe_schema(cfg, nb),
+            }
+        s = {
+            "embed": Param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           "embed"),
+            "final_norm": Param((cfg.d_model,), ("embed",), "ones"),
+            "layers": layers,
+        }
+        if not cfg.tie_embeddings:
+            s["unembed"] = Param((cfg.d_model, cfg.vocab),
+                                 ("embed", "vocab"), fan_in_axes=(0,))
+        return s
+
+    def _xlstm_schema(self):
+        cfg = self.cfg
+        n_s = len(self._slstm_ids())
+        n_m = cfg.num_layers - n_s
+        s = {
+            "embed": Param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           "embed"),
+            "final_norm": Param((cfg.d_model,), ("embed",), "ones"),
+            "mlstm": xlstm_mod.mlstm_schema(cfg, n_m),
+            "slstm": xlstm_mod.slstm_schema(cfg, n_s),
+        }
+        if not cfg.tie_embeddings:
+            s["unembed"] = Param((cfg.d_model, cfg.vocab),
+                                 ("embed", "vocab"), fan_in_axes=(0,))
+        return s
+
+    def _hybrid_schema(self):
+        cfg = self.cfg
+        s = {
+            "embed": Param((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           "embed"),
+            "final_norm": Param((cfg.d_model,), ("embed",), "ones"),
+            "mamba": ssm_mod.mamba2_schema(cfg, cfg.num_layers),
+        }
+        n_attn = len(cfg.attention_layer_ids())
+        if n_attn:
+            # ONE weight-shared attention block (zamba2) + its MLP
+            shared = {**tfm.attn_schema(cfg, 0, ()),
+                      **tfm.mlp_schema(cfg, 0, ())}
+            s["shared_attn"] = shared
+        if not cfg.tie_embeddings:
+            s["unembed"] = Param((cfg.d_model, cfg.vocab),
+                                 ("embed", "vocab"), fan_in_axes=(0,))
+        return s
+
+    def _slstm_ids(self):
+        cfg = self.cfg
+        k = cfg.xlstm.slstm_every
+        return tuple(range(k - 1, cfg.num_layers, k)) if k else ()
+
+    def init(self, rng) -> Any:
+        return init_params(self.schema(), rng, self.cfg.param_dtype)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self.schema(), self.cfg.param_dtype)
+
+    def logical_axes(self) -> Any:
+        return logical_axes(self.schema())
+
+    # ------------------------------------------------------------------ #
+    # full-sequence forward (train / prefill scoring)
+    # ------------------------------------------------------------------ #
+    def forward_hidden(self, params, tokens, *, extra: Optional[Dict] = None,
+                       remat: bool = True):
+        """Final hidden states (pre-unembed) — used by the chunked loss
+        so [B, S, vocab] logits are never materialized at scale."""
+        return self.forward(params, tokens, extra=extra, remat=remat,
+                            _return_hidden=True)
+
+    def forward(self, params, tokens, *, extra: Optional[Dict] = None,
+                collect_kv: bool = False, remat: bool = True,
+                _return_hidden: bool = False):
+        cfg = self.cfg
+        extra = extra or {}
+        fam = cfg.family
+        if _return_hidden:
+            assert not collect_kv
+            return self._forward_dispatch_hidden(params, tokens, extra,
+                                                 remat)
+        if fam == "dense":
+            return tfm.dense_forward(params, cfg, tokens,
+                                     collect_kv=collect_kv, remat=remat)
+        if fam == "vlm":
+            embeds = tfm.embed_tokens(params, cfg, tokens)
+            patches = extra["patch_embeds"].astype(cfg.dtype)
+            h = jnp.concatenate([patches, embeds], axis=1)
+            return tfm.dense_forward(params, cfg, tokens, input_embeds=h,
+                                     collect_kv=collect_kv, remat=remat)
+        if fam == "encdec":
+            return tfm.encdec_forward(params, cfg, tokens,
+                                      extra["frame_embeds"].astype(cfg.dtype),
+                                      remat=remat)
+        if fam == "moe":
+            return self._moe_forward(params, tokens, collect_kv=collect_kv,
+                                     remat=remat)
+        if fam == "xlstm":
+            return self._xlstm_forward(params, tokens, remat=remat)
+        if fam in ("ssm", "hybrid"):
+            return self._hybrid_forward(params, tokens,
+                                        collect_kv=collect_kv, remat=remat)
+        raise ValueError(fam)
+
+    def _forward_dispatch_hidden(self, params, tokens, extra, remat):
+        """Same as forward() but stops before unembed."""
+        import repro.models.transformer as _t
+        orig = _t.unembed
+        captured = {}
+
+        def capture(params_, cfg_, h):
+            captured["h"] = h
+            return h[..., :1]  # dummy tiny tensor, discarded
+
+        _t.unembed = capture
+        try:
+            self.forward(params, tokens, extra=extra, remat=remat)
+        finally:
+            _t.unembed = orig
+        return captured["h"]
+
+    def _moe_forward(self, params, tokens, *, collect_kv=False, remat=True):
+        cfg = self.cfg
+        h = tfm.embed_tokens(params, cfg, tokens)
+        S = h.shape[1]
+        positions = jnp.arange(S)[None, :]
+        il = cfg.moe.interleave
+
+        if il == 1:
+            def body(carry, lp):
+                carry, kv = tfm.full_attn_block(carry, lp, cfg, positions,
+                                                collect_kv=collect_kv)
+                carry = moe_mod.moe_block(carry, lp, cfg)
+                return carry, kv
+        else:
+            def body(carry, lp):
+                carry, kv1 = tfm.full_attn_block(
+                    carry, lp["dense_attn"], cfg, positions,
+                    collect_kv=collect_kv)
+                carry = tfm.dense_mlp_block(carry, lp["dense_mlp"], cfg)
+                carry, kv2 = tfm.full_attn_block(
+                    carry, lp["moe_attn"], cfg, positions,
+                    collect_kv=collect_kv)
+                carry = moe_mod.moe_block(carry, lp["moe"], cfg)
+                if collect_kv:
+                    kv = jax.tree.map(
+                        lambda a, b: jnp.stack([a, b]), kv1, kv2)
+                else:
+                    kv = None
+                return carry, kv
+
+        if remat:
+            body = jax.checkpoint(body)
+        h, kvs = jax.lax.scan(body, h, params["layers"])
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = tfm.unembed(params, cfg, h)
+        if collect_kv:
+            if il == 2:  # [nb, 2, ...] -> [L, ...]
+                kvs = jax.tree.map(
+                    lambda a: a.reshape((-1,) + a.shape[2:]), kvs)
+            return logits, kvs
+        return logits
+
+    def _xlstm_forward(self, params, tokens, remat=True):
+        cfg = self.cfg
+        h = tfm.embed_tokens(params, cfg, tokens)
+        slstm_ids = set(self._slstm_ids())
+        mi = si = 0
+        for l in range(cfg.num_layers):
+            if l in slstm_ids:
+                lp = jax.tree.map(lambda a: a[si], params["slstm"])
+                fn = xlstm_mod.slstm_forward_layer
+                si += 1
+            else:
+                lp = jax.tree.map(lambda a: a[mi], params["mlstm"])
+                fn = xlstm_mod.mlstm_forward_layer
+                mi += 1
+            fn_c = (lambda f: (lambda hh, pp: f(hh, pp, cfg)))(fn)
+            if remat:
+                fn_c = jax.checkpoint(fn_c)
+            h = h + fn_c(h, lp)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return tfm.unembed(params, cfg, h)
+
+    def _hybrid_forward(self, params, tokens, *, collect_kv=False,
+                        remat=True, collect_state=False):
+        cfg = self.cfg
+        h = tfm.embed_tokens(params, cfg, tokens)
+        S = h.shape[1]
+        positions = jnp.arange(S)[None, :]
+        attn_ids = cfg.attention_layer_ids()
+
+        def mamba_body(carry, lp):
+            out = ssm_mod.mamba2_forward_layer(carry, lp, cfg,
+                                               return_state=collect_state)
+            if collect_state:
+                y, st = out
+                return carry + y, st
+            return carry + out, None
+        if remat:
+            mamba_body = jax.checkpoint(mamba_body)
+
+        kvs, states = [], []
+        prev = 0
+        # the shared attention block runs AFTER the mamba block at `site`
+        for site in list(attn_ids) + [cfg.num_layers]:
+            end = min(site + 1, cfg.num_layers)
+            if end - prev > 0:
+                seg = jax.tree.map(lambda a: a[prev:end], params["mamba"])
+                h, st = jax.lax.scan(mamba_body, h, seg)
+                if collect_state:
+                    states.append(st)
+            if site < cfg.num_layers:
+                # weight-shared attention block at `site`
+                h, kv = tfm.full_attn_block(h, params["shared_attn"], cfg,
+                                            positions, collect_kv=collect_kv)
+                h = tfm.dense_mlp_block(h, params["shared_attn"], cfg)
+                if collect_kv:
+                    kvs.append(kv)
+                prev = site + 1
+            else:
+                prev = site
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = tfm.unembed(params, cfg, h)
+        out = (logits,)
+        if collect_kv:
+            out = out + (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs),)
+        if collect_state:
+            st = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *states)
+            out = out + (st,)
+        return out if len(out) > 1 else logits
+
+    # ------------------------------------------------------------------ #
+    # prefill -> decode state
+    # ------------------------------------------------------------------ #
+    def cache_geometry(self, batch: int, max_context: int,
+                       hbm_fraction: float = 0.25,
+                       pad_to: int = 16) -> CacheGeometry:
+        cfg = self.cfg
+        n_attn = len(cfg.attention_layer_ids())
+        return CacheGeometry.for_context(
+            num_layers=max(n_attn, 1), batch=batch, context=max_context,
+            kv_heads=cfg.kv_heads, head_dim=cfg.head_dim,
+            page_tokens=cfg.kv_page_tokens, hbm_fraction=hbm_fraction,
+            pad_to=pad_to, dtype=cfg.dtype)
+
+    def prefill(self, params, tokens, geo: CacheGeometry, *,
+                extra: Optional[Dict] = None):
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            out = self.forward(params, tokens, extra=extra, collect_kv=True)
+            logits, (k, v) = out
+            prompt = tokens.shape[1] + (
+                cfg.frontend.num_embeddings if fam == "vlm" else 0)
+            cache = prefill_cache(geo, k, v, prompt)
+            return logits[:, -1], cache
+        if fam == "hybrid":
+            logits, (k, v), st = self._hybrid_forward(
+                params, tokens, collect_kv=True, collect_state=True)
+            cache = prefill_cache(geo, k, v, tokens.shape[1])
+            s, conv = st
+            return logits[:, -1], {"ssm": {"s": s, "conv": conv},
+                                   "kv": cache}
+        if fam == "encdec":
+            logits, (k, v), enc = tfm.encdec_forward(
+                params, cfg, tokens, extra["frame_embeds"], collect_kv=True)
+            cache = prefill_cache(geo, k, v, tokens.shape[1])
+            return logits[:, -1], {"kv": cache, "enc": enc}
+        if fam == "xlstm":
+            # recurrent prefill: replay tokens through decode steps
+            state = self.init_decode_state(tokens.shape[0])
+            logits = None
+            for t in range(tokens.shape[1]):
+                logits, state = self.decode_step(params, state, tokens[:, t])
+            return logits, state
+        raise ValueError(f"prefill not supported for {fam}")
+
+    # ------------------------------------------------------------------ #
+    # decode
+    # ------------------------------------------------------------------ #
+    def init_decode_state(self, batch: int,
+                          geo: Optional[CacheGeometry] = None):
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe", "encdec"):
+            assert geo is not None
+            return init_cache(geo)
+        if fam == "xlstm":
+            return self._xlstm_state(batch)
+        if fam in ("ssm", "hybrid"):
+            ssm_state = self._mamba_state(batch)
+            if geo is not None and cfg.attention_layer_ids():
+                return {"ssm": ssm_state, "kv": init_cache(geo)}
+            return {"ssm": ssm_state}
+        raise ValueError(fam)
+
+    def _mamba_state(self, batch):
+        cfg = self.cfg
+        inner = cfg.ssm.expand * cfg.d_model
+        H, N = cfg.num_heads, cfg.ssm.state_dim
+        P = inner // H
+        L = cfg.num_layers
+        return {
+            "s": jnp.zeros((L, batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((L, batch, cfg.ssm.conv_width - 1,
+                               inner + 2 * N), jnp.float32),
+        }
+
+    def _xlstm_state(self, batch):
+        cfg = self.cfg
+        inner = cfg.xlstm.expand * cfg.d_model
+        H = cfg.num_heads
+        P = inner // H
+        Ps = cfg.d_model // H
+        n_s = len(self._slstm_ids())
+        n_m = cfg.num_layers - n_s
+        return {
+            "m_C": jnp.zeros((n_m, batch, H, P, P), jnp.float32),
+            "m_n": jnp.zeros((n_m, batch, H, P), jnp.float32),
+            "m_m": jnp.full((n_m, batch, H), -1e30, jnp.float32),
+            "m_conv": jnp.zeros((n_m, batch, cfg.xlstm.conv_width - 1,
+                                 inner), jnp.float32),
+            "s_c": jnp.zeros((n_s, batch, H, Ps), jnp.float32),
+            "s_n": jnp.zeros((n_s, batch, H, Ps), jnp.float32),
+            "s_m": jnp.full((n_s, batch, H, Ps), -1e30, jnp.float32),
+            "s_h": jnp.zeros((n_s, batch, H, Ps), jnp.float32),
+        }
+
+    def decode_step(self, params, state, token, *,
+                    write_slot: Optional[jax.Array] = None,
+                    extra: Optional[Dict] = None,
+                    use_pallas: Optional[bool] = None):
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            if write_slot is None:
+                write_slot = default_write_slot(state)
+            return tfm.dense_decode_step(params, cfg, state, token,
+                                         write_slot, use_pallas=use_pallas)
+        if fam == "moe":
+            return self._moe_decode_step(params, state, token, write_slot,
+                                         use_pallas)
+        if fam == "xlstm":
+            return self._xlstm_decode_step(params, state, token)
+        if fam in ("ssm", "hybrid"):
+            return self._hybrid_decode_step(params, state, token,
+                                            write_slot, use_pallas)
+        if fam == "encdec":
+            return self._encdec_decode_step(params, state, token, extra,
+                                            write_slot, use_pallas)
+        raise ValueError(fam)
+
+    def _moe_decode_step(self, params, cache, token, write_slot, use_pallas):
+        """MoE decode: attention layers use the paged cache; FFN is MoE."""
+        cfg = self.cfg
+        from repro.models.transformer import (
+            _update_cache_after_step, attn_qkv, _bump_valid)
+        from repro.kvcache.paged import write_token_layer
+        from repro.kernels import ops as kops
+
+        B = token.shape[0]
+        T = cache.k_hbm.shape[3]
+        pos = cache.length
+        offset = pos % T
+        h = tfm.embed_tokens(params, cfg, token[:, None])
+        if write_slot is None:
+            write_slot = default_write_slot(cache)
+        cache = tfm.allocate_token_page(cache, write_slot)
+        hl, hv, el, ev = cache.tier_lists()
+        il = cfg.moe.interleave
+
+        def attn_part(hcur, lp, pools, slot, lists):
+            k_hbm_l, v_hbm_l, k_host_l, v_host_l = pools
+            hl_l, hv_l, el_l, ev_l = lists
+            x = rms_norm(hcur, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = attn_qkv(x, lp, cfg, pos[:, None])
+            k_hbm_l, v_hbm_l, k_host_l, v_host_l = write_token_layer(
+                k_hbm_l, v_hbm_l, k_host_l, v_host_l, slot, offset,
+                k[:, 0], v[:, 0])
+            qg = q[:, 0].reshape(B, cfg.kv_heads, cfg.q_per_kv, cfg.head_dim)
+            hv_new = _bump_valid(hv_l, slot, offset, T, hbm=True,
+                                 hbm_pages=k_hbm_l.shape[1])
+            ev_new = _bump_valid(ev_l, slot - k_hbm_l.shape[1], offset, T,
+                                 hbm=False, hbm_pages=k_hbm_l.shape[1])
+            o, imp = kops.tiered_paged_attention(
+                qg, k_hbm_l, v_hbm_l, k_host_l, v_host_l,
+                hl_l, hv_new, el_l, ev_new, use_pallas=use_pallas)
+            o = o.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+            hcur = hcur + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+            return hcur, (k_hbm_l, v_hbm_l, k_host_l, v_host_l), imp
+
+        group = token.shape[0]  # single group at decode
+
+        if il == 1:
+            def body(carry, xs):
+                hcur = carry
+                lp, kh, vh, ke, ve, slot, hl_l, hv_l, el_l, ev_l = xs
+                hcur, pools, imp = attn_part(
+                    hcur, lp, (kh, vh, ke, ve), slot,
+                    (hl_l, hv_l, el_l, ev_l))
+                hcur = moe_mod.moe_block(hcur, lp, cfg, group_size=group)
+                return hcur, pools + (imp,)
+            xs = (params["layers"], cache.k_hbm, cache.v_hbm, cache.k_host,
+                  cache.v_host, write_slot, hl, hv, el, ev)
+            h, (kh, vh, ke, ve, imp) = jax.lax.scan(body, h, xs)
+        else:
+            # layers interleave dense/moe: scan over superblocks; cache
+            # arrays ordered [dense0, moe0, dense1, moe1, ...]
+            nb = cfg.num_layers // 2
+
+            def reshape2(a):
+                return a.reshape((nb, 2) + a.shape[1:])
+
+            c2 = jax.tree.map(reshape2, (cache.k_hbm, cache.v_hbm,
+                                         cache.k_host, cache.v_host))
+            ws2 = reshape2(write_slot)
+            l2 = jax.tree.map(reshape2, (hl, hv, el, ev))
+
+            def body(carry, xs):
+                hcur = carry
+                lp, (kh2, vh2, ke2, ve2), slot2, (hl2, hv2, el2, ev2) = xs
+                hcur, pools_a, imp_a = attn_part(
+                    hcur, lp["dense_attn"],
+                    (kh2[0], vh2[0], ke2[0], ve2[0]), slot2[0],
+                    (hl2[0], hv2[0], el2[0], ev2[0]))
+                hcur = tfm.dense_mlp_block(hcur, lp["dense_mlp"], cfg)
+                hcur, pools_b, imp_b = attn_part(
+                    hcur, lp["moe_attn"],
+                    (kh2[1], vh2[1], ke2[1], ve2[1]), slot2[1],
+                    (hl2[1], hv2[1], el2[1], ev2[1]))
+                hcur = moe_mod.moe_block(hcur, lp["moe"], cfg,
+                                         group_size=group)
+                pools = jax.tree.map(lambda a, b: jnp.stack([a, b]),
+                                     pools_a, pools_b)
+                imp = jnp.stack([imp_a, imp_b])
+                return hcur, pools + (imp,)
+
+            h, (kh, vh, ke, ve, imp) = jax.lax.scan(
+                body, h, (params["layers"], c2, ws2, l2))
+            kh, vh, ke, ve, imp = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:]),
+                (kh, vh, ke, ve, imp))
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = tfm.unembed(params, cfg, h)[:, 0]
+        cache = _update_cache_after_step(cache, kh, vh, ke, ve, imp,
+                                         write_slot, offset)
+        return logits, cache
+
+    def _xlstm_decode_step(self, params, state, token):
+        cfg = self.cfg
+        h = tfm.embed_tokens(params, cfg, token[:, None])[:, 0]
+        slstm_ids = set(self._slstm_ids())
+        mi = si = 0
+        new = dict(state)
+        for l in range(cfg.num_layers):
+            if l in slstm_ids:
+                lp = jax.tree.map(lambda a: a[si], params["slstm"])
+                st = (state["s_c"][si], state["s_n"][si],
+                      state["s_m"][si], state["s_h"][si])
+                y, (c, n, m, hh) = xlstm_mod.slstm_decode_layer(
+                    h, lp, cfg, st)
+                new["s_c"] = new["s_c"].at[si].set(c)
+                new["s_n"] = new["s_n"].at[si].set(n)
+                new["s_m"] = new["s_m"].at[si].set(m)
+                new["s_h"] = new["s_h"].at[si].set(hh)
+                si += 1
+            else:
+                lp = jax.tree.map(lambda a: a[mi], params["mlstm"])
+                st = (state["m_C"][mi], state["m_n"][mi],
+                      state["m_m"][mi], state["m_conv"][mi])
+                y, (C, n, m, conv) = xlstm_mod.mlstm_decode_layer(
+                    h, lp, cfg, st)
+                new["m_C"] = new["m_C"].at[mi].set(C)
+                new["m_n"] = new["m_n"].at[mi].set(n)
+                new["m_m"] = new["m_m"].at[mi].set(m)
+                new["m_conv"] = new["m_conv"].at[mi].set(conv)
+                mi += 1
+            h = h + y
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = tfm.unembed(params, cfg, h[:, None])[:, 0]
+        return logits, new
+
+    def _hybrid_decode_step(self, params, state, token, write_slot,
+                            use_pallas):
+        cfg = self.cfg
+        from repro.models.transformer import (
+            _update_cache_after_step, attn_qkv, _bump_valid)
+        from repro.kvcache.paged import write_token_layer
+        from repro.kernels import ops as kops
+
+        h = tfm.embed_tokens(params, cfg, token[:, None])[:, 0]
+        ssm_state = state["ssm"]
+        cache: Optional[PagedKVCache] = state.get("kv")
+        attn_ids = cfg.attention_layer_ids()
+        B = token.shape[0]
+
+        new_s, new_conv = ssm_state["s"], ssm_state["conv"]
+        imp_sites = []
+        pools = None
+        if cache is not None:
+            T = cache.k_hbm.shape[3]
+            pos = cache.length
+            offset = pos % T
+            if write_slot is None:
+                write_slot = default_write_slot(cache)
+            cache = tfm.allocate_token_page(cache, write_slot)
+            hl, hv, el, ev = cache.tier_lists()
+            pools = [cache.k_hbm, cache.v_hbm, cache.k_host, cache.v_host]
+
+        site_i = 0
+        for l in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[l], params["mamba"])
+            y, s_new, c_new = ssm_mod.mamba2_decode_layer(
+                h, lp, cfg, ssm_state["s"][l], ssm_state["conv"][l])
+            new_s = new_s.at[l].set(s_new)
+            new_conv = new_conv.at[l].set(c_new)
+            h = h + y
+            if l in attn_ids and cache is not None:
+                sp = params["shared_attn"]
+                hs = h[:, None]
+                x = rms_norm(hs, sp["attn_norm"], cfg.norm_eps)
+                q, k, v = attn_qkv(x, sp, cfg, pos[:, None])
+                kh, vh, ke, ve = write_token_layer(
+                    pools[0][site_i], pools[1][site_i], pools[2][site_i],
+                    pools[3][site_i], write_slot[site_i], offset,
+                    k[:, 0], v[:, 0])
+                qg = q[:, 0].reshape(B, cfg.kv_heads, cfg.q_per_kv,
+                                     cfg.head_dim)
+                hv_new = _bump_valid(hv[site_i], write_slot[site_i], offset,
+                                     T, hbm=True, hbm_pages=kh.shape[1])
+                ev_new = _bump_valid(ev[site_i],
+                                     write_slot[site_i] - kh.shape[1],
+                                     offset, T, hbm=False,
+                                     hbm_pages=kh.shape[1])
+                o, imp = kops.tiered_paged_attention(
+                    qg, kh, vh, ke, ve, hl[site_i], hv_new, el[site_i],
+                    ev_new, use_pallas=use_pallas)
+                o = o.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+                hs = hs + jnp.einsum("bshk,hkd->bsd", o, sp["wo"])
+                hs = tfm.dense_mlp_block(hs, sp, cfg)
+                h = hs[:, 0]
+                pools[0] = pools[0].at[site_i].set(kh)
+                pools[1] = pools[1].at[site_i].set(vh)
+                pools[2] = pools[2].at[site_i].set(ke)
+                pools[3] = pools[3].at[site_i].set(ve)
+                imp_sites.append(imp)
+                site_i += 1
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = tfm.unembed(params, cfg, h[:, None])[:, 0]
+        new_state = {"ssm": {"s": new_s, "conv": new_conv}}
+        if cache is not None:
+            imp = jnp.stack(imp_sites)
+            cache = _update_cache_after_step(
+                cache, pools[0], pools[1], pools[2], pools[3], imp,
+                write_slot, offset)
+            new_state["kv"] = cache
+        return logits, new_state
+
+    def _encdec_decode_step(self, params, state, token, extra, write_slot,
+                            use_pallas):
+        """Decoder step: paged self-attn + dense cross-attn.
+
+        state: {"kv": PagedKVCache (self-attn), "enc": [B,F,d] encoder out}
+        """
+        cfg = self.cfg
+        from repro.models.transformer import _update_cache_after_step, _ln
+        from repro.kvcache.paged import write_token_layer
+        from repro.kernels import ops as kops
+        from repro.models.layers import repeat_kv, attention as full_attn
+
+        cache: PagedKVCache = state["kv"]
+        enc = state["enc"]
+        B = token.shape[0]
+        T = cache.k_hbm.shape[3]
+        pos = cache.length
+        offset = pos % T
+        if write_slot is None:
+            write_slot = default_write_slot(cache)
+        cache = tfm.allocate_token_page(cache, write_slot)
+        hl, hv, el, ev = cache.tier_lists()
+
+        h = (params["embed"][token]
+             + params["dec_pos"][pos]).astype(cfg.dtype)[:, None]
+
+        def body(carry, xs):
+            hcur = carry
+            lp, kh, vh, ke, ve, slot, hl_l, hv_l, el_l, ev_l = xs
+            x = _ln(hcur, lp["ln1"], cfg.norm_eps)
+            sa = lp["self_attn"]
+            q = jnp.einsum("bsd,dhk->bshk", x, sa["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", x, sa["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, sa["wv"])
+            kh, vh, ke, ve = write_token_layer(kh, vh, ke, ve, slot, offset,
+                                               k[:, 0], v[:, 0])
+            qg = q[:, 0].reshape(B, cfg.kv_heads, cfg.q_per_kv, cfg.head_dim)
+            hv_new = tfm._bump_valid(hv_l, slot, offset, T, hbm=True,
+                                     hbm_pages=kh.shape[1])
+            ev_new = tfm._bump_valid(ev_l, slot - kh.shape[1], offset, T,
+                                     hbm=False, hbm_pages=kh.shape[1])
+            o, imp = kops.tiered_paged_attention(
+                qg, kh, vh, ke, ve, hl_l, hv_new, el_l, ev_new,
+                use_pallas=use_pallas)
+            o = o.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+            hcur = hcur + jnp.einsum("bshk,hkd->bsd", o, sa["wo"])
+            # cross attention over (static) encoder output
+            x = _ln(hcur, lp["ln2"], cfg.norm_eps)
+            ca = lp["cross_attn"]
+            qx = jnp.einsum("bsd,dhk->bshk", x, ca["wq"])
+            kx = jnp.einsum("bfd,dhk->bfhk", enc, ca["wk"])
+            vx = jnp.einsum("bfd,dhk->bfhk", enc, ca["wv"])
+            ox = full_attn(qx, repeat_kv(kx, cfg.q_per_kv),
+                           repeat_kv(vx, cfg.q_per_kv), causal=False)
+            hcur = hcur + jnp.einsum("bshk,hkd->bsd", ox, ca["wo"])
+            x = _ln(hcur, lp["ln3"], cfg.norm_eps)
+            m = jnp.einsum("bsd,df->bsf", x, lp["mlp"]["w_in"]) \
+                + lp["mlp"]["b_in"]
+            hcur = hcur + (jnp.einsum("bsf,fd->bsd", jax.nn.gelu(m),
+                                      lp["mlp"]["w_out"])
+                           + lp["mlp"]["b_out"])
+            return hcur, (kh, vh, ke, ve, imp)
+
+        xs = (params["dec_layers"], cache.k_hbm, cache.v_hbm, cache.k_host,
+              cache.v_host, write_slot, hl, hv, el, ev)
+        h, (kh, vh, ke, ve, imp) = jax.lax.scan(body, h, xs)
+        h = _ln(h, params["dec_final"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])[:, 0]
+        cache = _update_cache_after_step(cache, kh, vh, ke, ve, imp,
+                                         write_slot, offset)
+        return logits, {"kv": cache, "enc": enc}
+
+
+def default_write_slot(cache: PagedKVCache) -> jax.Array:
+    """Static-placement slot choice inside jit (no control plane):
+    the token's logical page maps to HBM while room, else host.
+    Matches the paper's Static Placement baseline; the serving engine
+    overrides this with policy-chosen slots."""
+    L, B = cache.page_table.shape[0], cache.page_table.shape[1]
+    T = cache.k_hbm.shape[3]
+    logical = cache.length // T                       # [B]
+    existing = cache.page_table[:, jnp.arange(B), logical]   # [L, B]
+    slot = jnp.where(existing >= 0, existing, logical[None, :])
+    max_slot = cache.k_hbm.shape[2] + cache.k_host.shape[2] - 1
+    return jnp.clip(slot, 0, max_slot).astype(jnp.int32)

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with capacity-based einsum dispatch (GShard
+style) — the TPU-native MoE formulation: dispatch/combine are matmuls,
+so under (data, model) sharding XLA lowers them to all-to-all-class
+collectives instead of host-side scatter.
+
+Tokens are processed in groups to bound the [group, E, capacity]
+dispatch tensor; group size is a tunable (a §Perf knob). Experts are
+sharded over the `model` ("expert") axis.
+
+Supports top-1 (llama4-maverick) through top-8 (granite-moe), optional
+always-on shared expert, and interleaved dense/MoE layer stacks.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import constrain_batch, rms_norm
+from repro.models.params import Param
+
+
+def moe_schema(cfg: ModelConfig, L: int):
+    d, f = cfg.d_model, cfg.d_ff
+    E = cfg.moe.num_experts_padded
+    s = {
+        "moe_norm": Param((L, d), ("layers", "embed"), "ones"),
+        "router": Param((L, d, cfg.moe.num_experts),
+                        ("layers", "embed", None), fan_in_axes=(1,)),
+        "we_gate": Param((L, E, d, f), ("layers", "experts", "embed", "mlp"),
+                         fan_in_axes=(2,)),
+        "we_up": Param((L, E, d, f), ("layers", "experts", "embed", "mlp"),
+                       fan_in_axes=(2,)),
+        "we_down": Param((L, E, f, d), ("layers", "experts", "mlp", "embed"),
+                         fan_in_axes=(2,)),
+    }
+    if cfg.moe.shared_expert:
+        s["ws_gate"] = Param((L, d, f), ("layers", "embed", "mlp"),
+                             fan_in_axes=(1,))
+        s["ws_up"] = Param((L, d, f), ("layers", "embed", "mlp"),
+                           fan_in_axes=(1,))
+        s["ws_down"] = Param((L, f, d), ("layers", "mlp", "embed"),
+                             fan_in_axes=(1,))
+    return s
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def moe_ffn(x: jax.Array, lp, cfg: ModelConfig, *,
+            group_size: Optional[int] = None) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d] routed through experts.
+
+    Routing: softmax over experts, top-k, per-expert capacity
+    C = k * group / E * capacity_factor (tokens over capacity are
+    dropped — their residual path still carries them).
+    """
+    moe = cfg.moe
+    B, S, d = x.shape
+    T_real = B * S
+    xt = x.reshape(T_real, d)
+    if group_size is None:
+        group_size = min(T_real, moe.group_size)
+    # pad the token stream to a group multiple; padded rows route like
+    # normal tokens (consuming capacity of at most one group) and their
+    # outputs are sliced away below.
+    pad = (-T_real) % group_size
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    T = T_real + pad
+    G = T // group_size
+    E, k = moe.num_experts, moe.top_k
+    C = _round_up(max(int(group_size * k / E * moe.capacity_factor), 4), 4)
+
+    xg = xt.reshape(G, group_size, d)
+    logits = jnp.einsum("gsd,de->gse", xg, lp["router"]).astype(jnp.float32)
+    E_pad = moe.num_experts_padded
+    if E_pad != E:
+        # physical expert padding (EP divisibility): padded experts are
+        # unreachable by routing; one_hot below targets E_pad columns.
+        logits = jnp.pad(logits, ((0, 0), (0, 0), (0, E_pad - E)),
+                         constant_values=-1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [G,s,k]
+    # normalize selected gates (standard for k>1)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert via cumulative counts across the k choices
+    dispatch = jnp.zeros((G, group_size, E_pad, C), jnp.bool_)
+    combine = jnp.zeros((G, group_size, E_pad, C), jnp.float32)
+    counts = jnp.zeros((G, E_pad), jnp.int32)
+    for j in range(k):
+        onehot = jax.nn.one_hot(gate_idx[..., j], E_pad, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + counts[:, None, :]
+        counts = counts + onehot.sum(axis=1)
+        within = (pos < C) & (onehot > 0)
+        pos_c = jnp.clip(pos, 0, C - 1)
+        oh_c = jax.nn.one_hot(pos_c, C, dtype=jnp.float32) \
+            * within[..., None].astype(jnp.float32)          # [G,s,E,C]
+        dispatch = dispatch | (oh_c > 0)
+        combine = combine + oh_c * gate_vals[..., j][..., None, None] \
+            * onehot[..., None].astype(jnp.float32)
+
+    dd = dispatch.astype(cfg.dtype)
+    expert_in = jnp.einsum("gsec,gsd->gecd", dd, xg)         # [G,E,C,d]
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, lp["we_gate"]))
+         * jnp.einsum("gecd,edf->gecf", expert_in, lp["we_up"]))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, lp["we_down"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(cfg.dtype), expert_out)
+
+    if moe.shared_expert:
+        sh = (jax.nn.silu(jnp.einsum("gsd,df->gsf", xg, lp["ws_gate"]))
+              * jnp.einsum("gsd,df->gsf", xg, lp["ws_up"]))
+        y = y + jnp.einsum("gsf,fd->gsd", sh, lp["ws_down"])
+
+    return y.reshape(T, d)[:T_real].reshape(B, S, d)
+
+
+def moe_block(h, lp, cfg: ModelConfig, *, group_size=None):
+    h = constrain_batch(h)
+    x = rms_norm(h, lp["moe_norm"], cfg.norm_eps)
+    return h + moe_ffn(x, lp, cfg, group_size=group_size)

@@ -1,0 +1,75 @@
+"""Parameter schema system: one declaration drives init, abstract
+shapes (for the allocation-free dry-run), and logical sharding axes.
+
+A schema is a pytree (nested dicts) of `Param` leaves. Logical axis
+names are resolved to mesh axes by `repro.launch.shardings`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis per dim (None = replicated)
+    init: str = "normal"                # normal | zeros | ones | embed
+    fan_in_axes: Tuple[int, ...] = ()   # dims forming fan-in for scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = Dict[str, Any]  # nested dict with Param leaves
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, Param)
+
+
+def init_params(schema: Schema, rng: jax.Array,
+                dtype=jnp.bfloat16) -> Any:
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_leaf)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for p, r in zip(leaves, rngs):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        else:
+            fan_in = (np.prod([p.shape[i] for i in p.fan_in_axes])
+                      if p.fan_in_axes else p.shape[0] if p.shape else 1)
+            scale = 0.02 if p.init == "embed" else 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(r, p.shape, jnp.float32)
+                        * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(schema: Schema, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype),
+        schema, is_leaf=_is_leaf)
+
+
+def logical_axes(schema: Schema) -> Any:
+    return jax.tree.map(lambda p: p.axes, schema, is_leaf=_is_leaf)
+
+
+def param_bytes(schema: Schema, dtype_bytes: int = 2) -> int:
+    total = 0
+    for p in jax.tree.leaves(schema, is_leaf=_is_leaf):
+        total += int(np.prod(p.shape)) * dtype_bytes
+    return total
+
+
+def count_params(schema: Schema) -> int:
+    return sum(int(np.prod(p.shape))
+               for p in jax.tree.leaves(schema, is_leaf=_is_leaf))

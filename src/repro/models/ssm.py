@@ -1,0 +1,254 @@
+"""Mamba2 (SSD) blocks + the zamba2-style hybrid stack.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk attention-
+like matmuls + inter-chunk state scan) — the TPU-friendly O(S) form in
+which every large op is an MXU matmul. Decode is the O(1) recurrent
+update. Both are validated against a sequential reference in tests.
+
+Hybrid (zamba2): a stack of Mamba2 blocks with ONE weight-shared
+attention block applied every `attn_every` blocks; those shared-attn
+sites are the only KV-cache owners, which per DESIGN.md §6 makes this
+the most placement-friendly assigned architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import constrain_batch, rms_norm
+from repro.models.params import Param
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def mamba2_schema(cfg: ModelConfig, L: int):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    inner = ssm.expand * d
+    H = cfg.num_heads            # ssm heads
+    N = ssm.state_dim
+    conv_ch = inner + 2 * N
+    return {
+        "norm": Param((L, d), ("layers", "embed"), "ones"),
+        # in_proj -> [z(inner), x(inner), B(N), C(N), dt(H)]
+        "w_in": Param((L, d, 2 * inner + 2 * N + H),
+                      ("layers", "embed", "mlp"), fan_in_axes=(1,)),
+        "conv_w": Param((L, ssm.conv_width, conv_ch),
+                        ("layers", None, "mlp"), fan_in_axes=(1,)),
+        "conv_b": Param((L, conv_ch), ("layers", "mlp"), "zeros"),
+        "a_log": Param((L, H), ("layers", "heads"), "zeros"),
+        "dt_bias": Param((L, H), ("layers", "heads"), "zeros"),
+        "skip_d": Param((L, H), ("layers", "heads"), "ones"),
+        "y_norm": Param((L, inner), ("layers", "mlp"), "ones"),
+        "w_out": Param((L, inner, d), ("layers", "mlp", "embed"),
+                       fan_in_axes=(1,)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD forward (one layer)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x [B,S,C]; w [W,C]; left-pad W-1."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def _split_proj(x, lp, cfg: ModelConfig):
+    ssm = cfg.ssm
+    inner = ssm.expand * cfg.d_model
+    N, H = ssm.state_dim, cfg.num_heads
+    proj = jnp.einsum("bsd,dk->bsk", x, lp["w_in"])
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + N, 2 * inner + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    return z, conv_in, dt
+
+
+def mamba2_forward_layer(h, lp, cfg: ModelConfig, return_state: bool = False):
+    """h: [B, S, d] -> [B, S, d] (residual applied by caller).
+
+    return_state additionally yields the post-sequence recurrent state
+    (s [B,H,N,P], conv [B,W-1,conv_ch]) so prefill can hand off to the
+    recurrent decode path.
+    """
+    ssm = cfg.ssm
+    B_, S, d = h.shape
+    inner = ssm.expand * d
+    H, N = cfg.num_heads, ssm.state_dim
+    P = inner // H
+    Q = min(ssm.chunk, S)
+
+    h = constrain_batch(h)
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    z, conv_in, dt_raw = _split_proj(x, lp, cfg)
+    conv_in_real = conv_in
+    S_real = S
+    # pad to a chunk multiple; padded positions get dt=0 (identity decay,
+    # zero input) so the recurrent state is untouched by padding.
+    pad = (-S) % Q
+    if pad:
+        conv_in = jnp.pad(conv_in, ((0, 0), (0, pad), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)))
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    conv = jax.nn.silu(_causal_conv(conv_in, lp["conv_w"], lp["conv_b"]))
+    xin, Bc, Cc = jnp.split(conv, [inner, inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))    # [B,S,H]
+    if pad:
+        live = (jnp.arange(S) < S_real)[None, :, None]
+        dt = jnp.where(live, dt, 0.0)
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))                # [H]
+    da = dt * a                                                  # <= 0
+
+    xh = xin.reshape(B_, S, H, P).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+
+    # chunked views
+    dac = da.reshape(B_, nc, Q, H)
+    la = jnp.cumsum(dac, axis=2)                                 # [B,nc,Q,H]
+    Bq = Bc.reshape(B_, nc, Q, N)
+    Cq = Cc.reshape(B_, nc, Q, N)
+    xq = xbar.reshape(B_, nc, Q, H, P)
+
+    # ---- intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(la_i-la_j) xbar_j
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cq, Bq)                   # [B,nc,Q,Q]
+    li = la[:, :, :, None, :]                                    # i
+    lj = la[:, :, None, :, :]                                    # j
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    decay = jnp.where(mask[None, None, :, :, None],
+                      jnp.exp(li - lj), 0.0)                     # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, decay, xq)
+
+    # ---- chunk states: S_c = sum_j exp(la_end - la_j) B_j (x) xbar_j
+    w_end = jnp.exp(la[:, :, -1:, :] - la)                       # [B,nc,Q,H]
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchnp", Bq, w_end, xq)
+
+    # ---- inter-chunk scan
+    chunk_decay = jnp.exp(la[:, :, -1, :])                       # [B,nc,H]
+
+    def scan_body(s_prev, xs):
+        dec, s_c = xs
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    s_final, s_before = jax.lax.scan(
+        scan_body, s0,
+        (chunk_decay.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    s_before = s_before.transpose(1, 0, 2, 3, 4)                 # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cq, s_before,
+                         jnp.exp(la))
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    y = y + xh * lp["skip_d"].astype(jnp.float32)[None, None, :, None]
+
+    y = y.reshape(B_, S, inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, lp["w_out"])[:, :S_real]
+    if return_state:
+        W = ssm.conv_width
+        conv_state = conv_in_real[:, S_real - (W - 1):, :] \
+            .astype(jnp.float32)
+        return out, (s_final, conv_state)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode (one layer, one token)
+# ---------------------------------------------------------------------------
+
+def mamba2_decode_layer(h, lp, cfg: ModelConfig, state, conv_state):
+    """h: [B, d]; state: [B,H,N,P]; conv_state: [B, W-1, conv_ch]."""
+    ssm = cfg.ssm
+    B_, d = h.shape
+    inner = ssm.expand * d
+    H, N = cfg.num_heads, ssm.state_dim
+    P = inner // H
+
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    z, conv_in, dt_raw = _split_proj(x[:, None], lp, cfg)
+    conv_in = conv_in[:, 0]
+    # causal conv over [conv_state ; conv_in]
+    hist = jnp.concatenate([conv_state, conv_in[:, None]], axis=1)
+    w = lp["conv_w"]
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + lp["conv_b"])
+    conv_state = hist[:, 1:]
+
+    xin, Bc, Cc = jnp.split(conv, [inner, inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))    # [B,H]
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                        # [B,H]
+
+    xh = xin.reshape(B_, H, P).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    state = (state * dec[:, :, None, None]
+             + jnp.einsum("bn,bhp->bhnp", Bf, xbar))
+    y = jnp.einsum("bn,bhnp->bhp", Cf, state)
+    y = y + xh * lp["skip_d"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, inner) * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    return jnp.einsum("bk,kd->bd", y, lp["w_out"]), state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference (oracle for tests)
+# ---------------------------------------------------------------------------
+
+def mamba2_forward_layer_ref(h, lp, cfg: ModelConfig):
+    """O(S) sequential recurrence — ground truth for the chunked path."""
+    B_, S, d = h.shape
+    ssm = cfg.ssm
+    inner = ssm.expand * d
+    H, N = cfg.num_heads, ssm.state_dim
+    P = inner // H
+
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    z, conv_in, dt_raw = _split_proj(x, lp, cfg)
+    conv = jax.nn.silu(_causal_conv(conv_in, lp["conv_w"], lp["conv_b"]))
+    xin, Bc, Cc = jnp.split(conv, [inner, inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                        # [B,S,H]
+    xh = xin.reshape(B_, S, H, P).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+
+    def step(s, xs):
+        dec_t, b_t, c_t, xb_t = xs
+        s = s * dec_t[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b_t, xb_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, s)
+        return s, y
+
+    s0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0,
+        (dec.transpose(1, 0, 2), Bc.astype(jnp.float32).transpose(1, 0, 2),
+         Cc.astype(jnp.float32).transpose(1, 0, 2),
+         xbar.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3)                                 # [B,S,H,P]
+    y = y + xh * lp["skip_d"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, lp["w_out"])

@@ -1,0 +1,319 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM
+(scalar memory, inherently sequential — per the xLSTM paper).
+
+mLSTM uses exponential gating with the stabilizer recurrence
+  m_t = max(logsig(f_t) + m_{t-1}, i_t)
+which is max-plus associative, so the chunked form computes the exact
+same m_t in parallel:  m_i = max(m_prev + lf_i, max_{j<=i} w_ij) with
+w_ij = lf_i - lf_j + i_j. Outputs are bit-for-bit the sequential
+recurrence (validated in tests), and every heavy op is an MXU matmul —
+this is the linear-attention analogue of flash attention's streaming
+softmax, which is why the same (carry m, rescale on update) machinery
+appears in our paged-attention kernel.
+
+No KV cache exists in this family: the recurrent state is a fixed-size
+matrix that is hot on every step, so (DESIGN.md §6) the paper's
+placement technique is inapplicable — state is pinned in HBM exactly
+like weights.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import constrain_batch, rms_norm
+from repro.models.params import Param
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+def mlstm_schema(cfg: ModelConfig, L: int):
+    d = cfg.d_model
+    inner = cfg.xlstm.expand * d
+    H = cfg.num_heads
+    W = cfg.xlstm.conv_width
+    return {
+        "norm": Param((L, d), ("layers", "embed"), "ones"),
+        "w_up": Param((L, d, 2 * inner), ("layers", "embed", "mlp"),
+                      fan_in_axes=(1,)),
+        "conv_w": Param((L, W, inner), ("layers", None, "mlp"),
+                        fan_in_axes=(1,)),
+        "conv_b": Param((L, inner), ("layers", "mlp"), "zeros"),
+        "wq": Param((L, inner, inner), ("layers", "mlp", None),
+                    fan_in_axes=(1,)),
+        "wk": Param((L, inner, inner), ("layers", "mlp", None),
+                    fan_in_axes=(1,)),
+        "wv": Param((L, inner, inner), ("layers", "mlp", None),
+                    fan_in_axes=(1,)),
+        "wi": Param((L, inner, H), ("layers", "mlp", "heads"),
+                    fan_in_axes=(1,)),
+        "wf": Param((L, inner, H), ("layers", "mlp", "heads"),
+                    fan_in_axes=(1,)),
+        "bi": Param((L, H), ("layers", "heads"), "zeros"),
+        "bf": Param((L, H), ("layers", "heads"), "ones"),
+        "y_norm": Param((L, inner), ("layers", "mlp"), "ones"),
+        "w_out": Param((L, inner, d), ("layers", "mlp", "embed"),
+                       fan_in_axes=(1,)),
+    }
+
+
+def slstm_schema(cfg: ModelConfig, L: int):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w{g}"] = Param((L, d, d), ("layers", "embed", None),
+                               fan_in_axes=(1,))
+        gates[f"r{g}"] = Param((L, H, P, P), ("layers", "heads", None, None),
+                               fan_in_axes=(2,))
+        gates[f"b{g}"] = Param((L, d), ("layers", "embed"),
+                               "ones" if g == "f" else "zeros")
+    return {
+        "norm": Param((L, d), ("layers", "embed"), "ones"),
+        **gates,
+        "y_norm": Param((L, d), ("layers", "embed"), "ones"),
+        "w_out": Param((L, d, d), ("layers", "embed", None),
+                       fan_in_axes=(1,)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: chunk-parallel forward / recurrent decode / sequential ref
+# ---------------------------------------------------------------------------
+
+def _mlstm_inputs(h, lp, cfg: ModelConfig):
+    h = constrain_batch(h)
+    d = cfg.d_model
+    inner = cfg.xlstm.expand * d
+    H = cfg.num_heads
+    P = inner // H
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,dk->bsk", x, lp["w_up"])
+    xpath, z = jnp.split(up, 2, axis=-1)
+    return xpath, z, inner, H, P
+
+
+def _qkv_gates(xconv, xpath, lp, H, P):
+    B_, S, inner = xconv.shape
+    q = jnp.einsum("bsk,kj->bsj", xconv, lp["wq"]).reshape(B_, S, H, P)
+    k = jnp.einsum("bsk,kj->bsj", xconv, lp["wk"]).reshape(B_, S, H, P)
+    v = jnp.einsum("bsk,kj->bsj", xpath, lp["wv"]).reshape(B_, S, H, P)
+    k = k.astype(jnp.float32) * (P ** -0.5)
+    ig = (jnp.einsum("bsk,kh->bsh", xconv, lp["wi"])
+          + lp["bi"]).astype(jnp.float32)
+    fg = (jnp.einsum("bsk,kh->bsh", xconv, lp["wf"])
+          + lp["bf"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(fg)
+    return (q.astype(jnp.float32), k, v.astype(jnp.float32), ig, lf)
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+
+
+def mlstm_forward_layer(h, lp, cfg: ModelConfig):
+    """h [B,S,d] -> [B,S,d] (residual added by caller)."""
+    B_, S, d = h.shape
+    xpath, z, inner, H, P = _mlstm_inputs(h, lp, cfg)
+    xconv = jax.nn.silu(_causal_conv(xpath, lp["conv_w"], lp["conv_b"]))
+    q, k, v, ig, lf = _qkv_gates(xconv, xpath, lp, H, P)
+
+    Q = min(cfg.xlstm.chunk, S)
+    S_real = S
+    pad = (-S) % Q
+    if pad:
+        # padded steps: lf=0 (no decay), i=-inf (no input) -> state fixed
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=NEG)
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    qc = q.reshape(B_, nc, Q, H, P)
+    kc = k.reshape(B_, nc, Q, H, P)
+    vc = v.reshape(B_, nc, Q, H, P)
+    igc = ig.reshape(B_, nc, Q, H)
+    lfc = jnp.cumsum(lf.reshape(B_, nc, Q, H), axis=2)      # within-chunk
+
+    tri = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+
+    def chunk_body(carry, xs):
+        C_prev, n_prev, m_prev = carry       # [B,H,P,P], [B,H,P], [B,H]
+        qb, kb, vb, ib, lfb = xs             # [B,Q,H,*]
+        # log weights w_ij = lf_i - lf_j + i_j  (i>=j)
+        w = (lfb[:, :, None, :] - lfb[:, None, :, :]
+             + ib[:, None, :, :])                            # [B,Qi,Qj,H]
+        w = jnp.where(tri[None, :, :, None], w, NEG)
+        c_i = m_prev[:, None, :] + lfb                       # [B,Q,H]
+        m_i = jnp.maximum(jnp.max(w, axis=2), c_i)           # exact m_t
+        p = jnp.exp(w - m_i[:, :, None, :])
+        carry_w = jnp.exp(c_i - m_i)                         # [B,Q,H]
+
+        qk = jnp.einsum("bihp,bjhp->bijh", qb, kb)           # [B,Qi,Qj,H]
+        num_intra = jnp.einsum("bijh,bijh,bjhp->bihp", qk, p, vb)
+        num_carry = jnp.einsum("bhpr,bihp->bihr", C_prev, qb) \
+            * carry_w[..., None]
+        den_intra = jnp.einsum("bijh,bijh->bih", qk, p)
+        den_carry = jnp.einsum("bhp,bihp->bih", n_prev, qb) * carry_w
+        num = num_intra + num_carry
+        den = den_intra + den_carry
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+        # chunk-end state update
+        lf_end = lfb[:, -1, :]                               # [B,H]
+        a_j = lf_end[:, None, :] - lfb + ib                  # [B,Q,H]
+        m_new = jnp.maximum(m_prev + lf_end, jnp.max(a_j, axis=1))
+        scale_old = jnp.exp(m_prev + lf_end - m_new)
+        pw = jnp.exp(a_j - m_new[:, None, :])                # [B,Q,H]
+        C_new = (C_prev * scale_old[:, :, None, None]
+                 + jnp.einsum("bjh,bjhp,bjhr->bhpr", pw, kb, vb))
+        n_new = (n_prev * scale_old[:, :, None]
+                 + jnp.einsum("bjh,bjhp->bhp", pw, kb))
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B_, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B_, H, P), jnp.float32)
+    m0 = jnp.full((B_, H), NEG, jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_body, (C0, n0, m0),
+        (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4), igc.transpose(1, 0, 2, 3),
+         lfc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, lp["w_out"])[:, :S_real]
+
+
+def mlstm_forward_layer_ref(h, lp, cfg: ModelConfig):
+    """Sequential oracle."""
+    B_, S, d = h.shape
+    xpath, z, inner, H, P = _mlstm_inputs(h, lp, cfg)
+    xconv = jax.nn.silu(_causal_conv(xpath, lp["conv_w"], lp["conv_b"]))
+    q, k, v, ig, lf = _qkv_gates(xconv, xpath, lp, H, P)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, lft = xs
+        m_new = jnp.maximum(lft + m, it)
+        f_ = jnp.exp(lft + m - m_new)
+        i_ = jnp.exp(it - m_new)
+        C = C * f_[:, :, None, None] + i_[:, :, None, None] \
+            * jnp.einsum("bhp,bhr->bhpr", kt, vt)
+        n = n * f_[:, :, None] + i_[:, :, None] * kt
+        num = jnp.einsum("bhpr,bhp->bhr", C, qt)
+        den = jnp.einsum("bhp,bhp->bh", n, qt)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), y
+
+    C0 = jnp.zeros((B_, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B_, H, P), jnp.float32)
+    m0 = jnp.full((B_, H), NEG, jnp.float32)
+    _, ys = jax.lax.scan(
+        step, (C0, n0, m0),
+        (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+         v.transpose(1, 0, 2, 3), ig.transpose(1, 0, 2),
+         lf.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B_, S, inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, lp["w_out"])
+
+
+def mlstm_decode_layer(h, lp, cfg: ModelConfig, state):
+    """h [B,d]; state = (C [B,H,P,P], n [B,H,P], m [B,H], conv [B,W-1,inner])."""
+    C, n, m, conv_state = state
+    B_, d = h.shape
+    xpath, z, inner, H, P = _mlstm_inputs(h[:, None], lp, cfg)
+    xp = xpath[:, 0]
+    hist = jnp.concatenate([conv_state, xp[:, None]], axis=1)
+    xconv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, lp["conv_w"])
+                        + lp["conv_b"])
+    q, k, v, ig, lf = _qkv_gates(xconv[:, None], xpath, lp, H, P)
+    qt, kt, vt = q[:, 0], k[:, 0], v[:, 0]
+    it, lft = ig[:, 0], lf[:, 0]
+    m_new = jnp.maximum(lft + m, it)
+    f_ = jnp.exp(lft + m - m_new)
+    i_ = jnp.exp(it - m_new)
+    C = C * f_[:, :, None, None] + i_[:, :, None, None] \
+        * jnp.einsum("bhp,bhr->bhpr", kt, vt)
+    n = n * f_[:, :, None] + i_[:, :, None] * kt
+    num = jnp.einsum("bhpr,bhp->bhr", C, qt)
+    den = jnp.einsum("bhp,bhp->bh", n, qt)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(B_, inner) * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, lp["w_out"])
+    return out, (C, n, m_new, hist[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential by construction)
+# ---------------------------------------------------------------------------
+
+def _slstm_step(lp, cfg, carry, xt):
+    """carry: (c, n, m, hprev) each [B,H,P]; xt: [B,d] pre-projected gates."""
+    c, n, m, hprev = carry
+    H = cfg.num_heads
+    P = cfg.d_model // H
+    B_ = xt.shape[0]
+
+    def gate(name):
+        wx = jnp.einsum("bd,dk->bk", xt, lp[f"w{name}"])
+        rh = jnp.einsum("bhp,hpr->bhr", hprev, lp[f"r{name}"]
+                        ).reshape(B_, H * P)
+        return (wx + rh + lp[f"b{name}"]).astype(jnp.float32) \
+            .reshape(B_, H, P)
+
+    zt = jnp.tanh(gate("z"))
+    it = gate("i")
+    ft = jax.nn.log_sigmoid(gate("f"))
+    ot = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(ft + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c = f_ * c + i_ * zt
+    n = f_ * n + i_
+    hnew = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, hnew), hnew
+
+
+def slstm_forward_layer(h, lp, cfg: ModelConfig):
+    h = constrain_batch(h)
+    B_, S, d = h.shape
+    H, P = cfg.num_heads, d // cfg.num_heads
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+
+    def step(carry, xt):
+        return _slstm_step(lp, cfg, carry, xt)
+
+    z0 = jnp.zeros((B_, H, P), jnp.float32)
+    m0 = jnp.full((B_, H, P), NEG, jnp.float32)
+    (_, _, _, _), ys = jax.lax.scan(step, (z0, z0, m0, z0),
+                                    x.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2, 3).reshape(B_, S, d)
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dk->bsk", y, lp["w_out"])
+
+
+def slstm_decode_layer(h, lp, cfg: ModelConfig, state):
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    state, y = _slstm_step(lp, cfg, state, x)
+    B_ = h.shape[0]
+    y = y.reshape(B_, cfg.d_model)
+    y = rms_norm(y.astype(cfg.dtype), lp["y_norm"], cfg.norm_eps)
+    return jnp.einsum("bd,dk->bk", y, lp["w_out"]), state

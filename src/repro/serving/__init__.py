@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, EngineConfig, StepStats
+
+__all__ = ["ServingEngine", "EngineConfig", "StepStats"]

@@ -1,0 +1,249 @@
+"""Serving engine: the paper's dynamic KV placement as a live feature.
+
+Per decode step:
+  1. (data plane, jit) `decode_step` over the two-tier paged cache with
+     optional Quest-style page bypassing; emits per-page attention-mass
+     importance stats for free (fused in the attention kernel).
+  2. (control plane, host) the placement policy turns importance stats
+     into a bounded `MigrationPlan` (promote hot host pages / demote
+     cold HBM pages) — no foresight, exactly the runtime-policy regime
+     the paper's SA bound upper-bounds.
+  3. (data plane, jit) `apply_migrations` swaps pages between pools.
+  4. telemetry: every byte the step moved is priced with the paper's
+     Eq.(1)-(5) under a `MemorySystemSpec`, so real runs and the
+     simulator are directly comparable (EXPERIMENTS.md §Repro-live).
+
+Engine policies: "static" (never migrate), "importance" (cost-aware
+hysteresis on the attention-mass EMA — our deployable beyond-paper
+policy), "lru" (promote-most-recent analog using recency of mass).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.latency_model import StepTraffic, step_latency
+from repro.core.tiers import MemorySystemSpec, TPU_V5E
+from repro.kvcache.migrate import MigrationPlan, apply_migrations
+from repro.kvcache.paged import CacheGeometry, PagedKVCache
+from repro.models.model import Model, default_write_slot
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_context: int = 512
+    hbm_fraction: float = 0.25
+    policy: str = "importance"
+    #: fraction of pages bypassed at attention (0 = dense attention)
+    attention_sparsity: float = 0.0
+    #: migration budget per step, as a fraction of HBM pages
+    migration_budget_frac: float = 0.1
+    promote_thresh: float = 0.02     # attention-mass EMA threshold
+    spec: MemorySystemSpec = TPU_V5E
+
+
+@dataclasses.dataclass
+class StepStats:
+    modeled_latency_s: float
+    h_read: float
+    e_read: float
+    m_in: float
+    m_out: float
+    hbm_hit_rate: float
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.stats: List[StepStats] = []
+
+    # ------------------------------------------------------------------ #
+    def start(self, prompts: jax.Array, extra=None):
+        geo = self.model.cache_geometry(
+            prompts.shape[0], self.cfg.max_context,
+            hbm_fraction=self.cfg.hbm_fraction)
+        self.geo = geo
+        logits, state = self.model.prefill(self.params, prompts, geo,
+                                           extra=extra)
+        self.state = state
+        return logits
+
+    @property
+    def _cache(self) -> PagedKVCache:
+        st = self.state
+        return st if isinstance(st, PagedKVCache) else st["kv"]
+
+    def _set_cache(self, cache):
+        if isinstance(self.state, PagedKVCache):
+            self.state = cache
+        else:
+            self.state = {**self.state, "kv": cache}
+
+    # ------------------------------------------------------------------ #
+    def step(self, token: jax.Array) -> jax.Array:
+        cache = self._cache
+        write_slot, mask = self._control_plane(cache)
+        kwargs = {}
+        if mask is not None and self.model.cfg.family in ("dense", "vlm"):
+            from repro.models import transformer as tfm
+            logits, cache_new = tfm.dense_decode_step(
+                self.params, self.model.cfg, cache, token, write_slot,
+                logical_page_mask=jnp.asarray(mask))
+            self._set_cache(cache_new)
+        else:
+            logits, state = self.model.decode_step(
+                self.params, self.state, token, write_slot=write_slot)
+            self.state = state
+            cache_new = self._cache
+
+        plan, traffic = self._plan_migrations(cache_new)
+        if plan is not None:
+            self._set_cache(apply_migrations(self._cache, plan))
+        self._record(traffic, mask)
+        return logits
+
+    # ------------------------------------------------------------------ #
+    # control plane
+    # ------------------------------------------------------------------ #
+    def _control_plane(self, cache: PagedKVCache):
+        """Choose the write slot for this token + the attention mask."""
+        geo = self.geo
+        length = int(np.asarray(cache.length)[0])
+        T = geo.page_tokens
+        logical = min(length // T, geo.max_pages - 1)
+        pt = np.asarray(cache.page_table)          # [L,B,maxP]
+        L, B = pt.shape[0], pt.shape[1]
+
+        # write slot: existing mapping, else first free HBM slot, else
+        # first free host slot (policy "static" semantics for new pages)
+        ho = np.asarray(cache.hbm_owner)
+        eo = np.asarray(cache.host_owner)
+        ws = np.zeros((L, B), np.int32)
+        for l in range(L):
+            for b in range(B):
+                if pt[l, b, logical] >= 0:
+                    ws[l, b] = pt[l, b, logical]
+                else:
+                    free_h = np.nonzero(ho[l, b] < 0)[0]
+                    if len(free_h):
+                        ws[l, b] = free_h[0]
+                    else:
+                        free_e = np.nonzero(eo[l, b] < 0)[0]
+                        ws[l, b] = geo.hbm_pages + (free_e[0] if len(free_e)
+                                                    else geo.host_pages - 1)
+
+        mask = None
+        sp = self.cfg.attention_sparsity
+        if sp > 0:
+            imp = np.asarray(cache.importance)     # [L,B,maxP]
+            alive = pt >= 0
+            mask = np.zeros_like(alive)
+            n_alive = alive.sum(-1)                # [L,B]
+            for l in range(L):
+                for b in range(B):
+                    k = max(1, int(round((1 - sp) * n_alive[l, b])))
+                    cand = np.nonzero(alive[l, b])[0]
+                    top = cand[np.argsort(-imp[l, b, cand], kind="stable")][:k]
+                    mask[l, b, top] = True
+                    mask[l, b, cand[:1]] = True          # sink page
+                    mask[l, b, cand[-2:]] = True         # recency pages
+        return jnp.asarray(ws), mask
+
+    def _plan_migrations(self, cache: PagedKVCache):
+        if self.cfg.policy == "static":
+            return None, self._traffic(cache, 0, 0)
+        imp = np.asarray(cache.importance)
+        ho = np.asarray(cache.hbm_owner)
+        eo = np.asarray(cache.host_owner)
+        L, B = ho.shape[0], ho.shape[1]
+        budget = max(1, int(self.cfg.migration_budget_frac
+                            * self.geo.hbm_pages))
+        promotes, demotes = [], []
+        for l in range(L):
+            for b in range(B):
+                host_pages = np.nonzero(eo[l, b] >= 0)[0]
+                if not len(host_pages):
+                    continue
+                host_logical = eo[l, b, host_pages]
+                host_imp = imp[l, b, host_logical]
+                order = np.argsort(-host_imp, kind="stable")
+                hot = [(host_pages[i], host_logical[i], host_imp[i])
+                       for i in order[:budget]
+                       if host_imp[i] > self.cfg.promote_thresh]
+                if not hot:
+                    continue
+                hbm_pages = np.nonzero(ho[l, b] >= 0)[0]
+                hbm_logical = ho[l, b, hbm_pages]
+                hbm_imp = imp[l, b, hbm_logical]
+                cold_order = np.argsort(hbm_imp, kind="stable")
+                free = np.nonzero(ho[l, b] < 0)[0].tolist()
+                ci = 0
+                for src, logical, h_imp in hot:
+                    if free:
+                        dst = free.pop(0)
+                    elif ci < len(cold_order):
+                        # swap: demote the coldest resident first
+                        victim = cold_order[ci]
+                        if hbm_imp[victim] >= h_imp:
+                            break   # nothing colder than the candidate
+                        vslot = hbm_pages[victim]
+                        # host slot freed by this promotion
+                        demotes.append((l, b, vslot, src,
+                                        hbm_logical[victim]))
+                        dst = vslot
+                        ci += 1
+                    else:
+                        break
+                    promotes.append((l, b, src, dst, logical))
+        if not promotes and not demotes:
+            return None, self._traffic(cache, 0, 0)
+        cap = max(len(promotes), len(demotes), 1)
+        plan = MigrationPlan.build(cap, promotes, demotes)
+        return plan, self._traffic(cache, len(promotes), len(demotes))
+
+    # ------------------------------------------------------------------ #
+    def _traffic(self, cache, n_pro, n_dem):
+        geo = self.geo
+        pb = geo.page_bytes()
+        ho = np.asarray(cache.hbm_owner) >= 0
+        eo = np.asarray(cache.host_owner) >= 0
+        # dense attention reads every resident page; sparse reads are
+        # rescaled by (1 - sparsity)
+        frac = 1.0 - self.cfg.attention_sparsity
+        h_read = float(ho.sum()) * pb * frac
+        e_read = float(eo.sum()) * pb * frac
+        return dict(h_read=h_read, e_read=e_read,
+                    m_in=n_pro * pb, m_out=n_dem * pb,
+                    h_write=pb / geo.page_tokens, e_write=0.0)
+
+    def _record(self, traffic, mask):
+        t = StepTraffic(**traffic)
+        lat = float(step_latency(t, self.cfg.spec))
+        denom = traffic["h_read"] + traffic["e_read"]
+        self.stats.append(StepStats(
+            modeled_latency_s=lat,
+            h_read=traffic["h_read"], e_read=traffic["e_read"],
+            m_in=traffic["m_in"], m_out=traffic["m_out"],
+            hbm_hit_rate=traffic["h_read"] / denom if denom else 1.0))
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> Dict[str, float]:
+        if not self.stats:
+            return {}
+        lat = np.array([s.modeled_latency_s for s in self.stats])
+        return {
+            "steps": len(self.stats),
+            "modeled_total_s": float(lat.sum()),
+            "modeled_tokens_per_s": len(lat) / float(lat.sum()),
+            "mean_hbm_hit_rate": float(np.mean(
+                [s.hbm_hit_rate for s in self.stats])),
+            "migrated_bytes": float(sum(s.m_in + s.m_out
+                                        for s in self.stats)),
+        }

@@ -1,0 +1,110 @@
+"""Request scheduler: admission + continuous-batching bookkeeping.
+
+Serving at scale needs more than a decode loop: requests arrive with
+different prompt lengths and budgets, finish at different times, and
+their KV pages must be reclaimed. This scheduler keeps a fixed-size
+batch of live slots over the engine's paged cache:
+
+  * admission — a request is admitted when a batch slot AND enough free
+    logical pages exist (prompt + expected decode length);
+  * completion — finished slots release their pages; the next queued
+    request is admitted without stopping the batch (continuous
+    batching, Sarathi/vLLM-style at step granularity);
+  * fairness — FIFO with a starvation bound (max_skips).
+
+The scheduler is pure control plane: it never touches arrays. It is
+exercised by tests/test_scheduler.py and examples/serve_loop.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    arrived_step: int = 0
+    started_step: int = -1
+    finished_step: int = -1
+    generated: int = 0
+
+    @property
+    def pages_needed(self) -> int:
+        return -(-(self.prompt_len + self.max_new_tokens) // 16)
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Optional[Request] = None
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class ContinuousBatcher:
+    def __init__(self, num_slots: int, total_pages: int,
+                 max_skips: int = 8):
+        self.slots: List[SlotState] = [SlotState() for _ in range(num_slots)]
+        self.total_pages = total_pages
+        self.free_pages = total_pages
+        self.queue: Deque[Request] = deque()
+        self.max_skips = max_skips
+        self.step_idx = 0
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.arrived_step = self.step_idx
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        skips = 0
+        requeue: List[Request] = []
+        while self.queue and skips <= self.max_skips:
+            slot = next((s for s in self.slots if s.free), None)
+            if slot is None:
+                break
+            req = self.queue.popleft()
+            if req.pages_needed <= self.free_pages:
+                slot.request = req
+                req.started_step = self.step_idx
+                self.free_pages -= req.pages_needed
+            else:
+                requeue.append(req)
+                skips += 1
+        for r in reversed(requeue):
+            self.queue.appendleft(r)
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> List[Request]:
+        """Advance one decode step; returns the active requests."""
+        self._admit()
+        active = []
+        for s in self.slots:
+            r = s.request
+            if r is None:
+                continue
+            r.generated += 1
+            if r.generated >= r.max_new_tokens:
+                r.finished_step = self.step_idx
+                self.completed.append(r)
+                self.free_pages += r.pages_needed
+                s.request = None
+            else:
+                active.append(r)
+        self.step_idx += 1
+        return active
+
+    # ------------------------------------------------------------------ #
+    def utilization(self) -> float:
+        live = sum(0 if s.free else 1 for s in self.slots)
+        return live / len(self.slots)
+
+    def page_pressure(self) -> float:
+        return 1.0 - self.free_pages / self.total_pages

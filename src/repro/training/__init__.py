@@ -1,0 +1,5 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.train_step import loss_fn, make_train_step, TrainState
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "loss_fn",
+           "make_train_step", "TrainState"]

@@ -1,0 +1,67 @@
+"""AdamW + cosine schedule, pure JAX (no optax in this environment).
+
+Optimizer state mirrors the parameter pytree (m, v) and is sharded with
+the same PartitionSpecs as the parameters, so under FSDP the optimizer
+state is fully sharded too (ZeRO-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup=100, total=10_000,
+                    min_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr=None,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 grad_clip=1.0) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    if lr is None:
+        lr = cosine_schedule(step)
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                     state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v)

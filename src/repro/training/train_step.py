@@ -1,0 +1,130 @@
+"""Training step: next-token loss, grads, AdamW, remat — pure JAX.
+
+The step is written against the Model facade so every assigned
+architecture trains through the same entry point (the train_4k dry-runs
+lower exactly this function). Gradient accumulation and a bf16
+compute / f32 optimizer-state split are built in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def loss_fn(model: Model, params, tokens, *, extra: Optional[Dict] = None,
+            logit_chunk: int = 512):
+    """Causal LM loss. tokens [B, S]; shift-by-one inside.
+
+    The [B, S, vocab] logits tensor is never materialized: hidden states
+    are unembedded in sequence chunks (vocab-parallel friendly; keeps
+    peak memory ~ B * chunk * vocab).
+    """
+    from repro.models.layers import constrain_batch
+    cfg = model.cfg
+    hidden = constrain_batch(
+        model.forward_hidden(params, tokens[:, :-1], extra=extra))
+    # VLM prepends patch embeddings: loss only over the text tail
+    if cfg.family == "vlm":
+        hidden = hidden[:, -(tokens.shape[1] - 1):]
+    targets = tokens[:, 1:]
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+
+    B, S, D = hidden.shape
+    c = min(logit_chunk, S)
+    pad = (-S) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nc = (S + pad) // c
+    valid = (jnp.arange(S + pad) < S).astype(jnp.float32)
+    valid = jnp.broadcast_to(valid, (B, S + pad))
+    hc = hidden.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, c).transpose(1, 0, 2)
+    vc = valid.reshape(B, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h_blk, t_blk, v_blk):
+        logits = jnp.einsum("bcd,dv->bcv", h_blk, w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, t_blk[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * v_blk)
+
+    def body(acc, xs):
+        h_blk, t_blk, v_blk = xs
+        return acc + chunk_loss(h_blk, t_blk, v_blk), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (hc, tc, vc))
+    return total / (B * S)
+
+
+def make_train_step(model: Model, *, accum_steps: int = 1,
+                    extra_keys: tuple = (), lr=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": [B, S]} (+ modality extras). With accum_steps > 1
+    the batch's leading dim is split into micro-batches and gradients
+    are accumulated in f32 before one optimizer update.
+    """
+
+    def grads_of(params, tokens, extra):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, tokens, extra=extra))(params)
+        return loss, grads
+
+    def train_step(state: TrainState, batch: Dict) -> tuple:
+        tokens = batch["tokens"]
+        extra = {k: batch[k] for k in extra_keys} or None
+
+        if accum_steps == 1:
+            loss, grads = grads_of(state.params, tokens, extra)
+        else:
+            B = tokens.shape[0]
+            mb = B // accum_steps
+
+            def micro(i, carry):
+                acc, loss_acc = carry
+                sl = jax.lax.dynamic_slice_in_dim(tokens, i * mb, mb, 0)
+                ex = None
+                if extra is not None:
+                    ex = {k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, 0)
+                          for k, v in extra.items()}
+                loss, g = grads_of(state.params, sl, ex)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, loss_acc + loss
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, loss_sum = jax.lax.fori_loop(
+                0, accum_steps, micro, (zero, jnp.zeros((), jnp.float32)))
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+
+        params, opt = adamw_update(grads, state.opt, state.params, lr=lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return TrainState(params=params, opt=opt), {
+            "loss": loss, "grad_norm": gnorm, "step": opt.step}
+
+    return train_step
+
+
+def init_train_state(model: Model, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=adamw_init(params))

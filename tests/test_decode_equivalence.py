@@ -1,0 +1,158 @@
+"""The serving stack's core fidelity property: prefill + paged two-tier
+decode reproduces the teacher-forced forward EXACTLY (both tiers in
+play, fresh-page allocation on page boundaries, position handling)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import Model
+
+B = 2
+PREFILL = 16   # page-aligned on purpose: forces fresh-page allocation
+DECODE = 4
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, dtype=jnp.float32,
+                               param_dtype=jnp.float32)
+
+
+def _run(arch, hbm_fraction):
+    rng = np.random.default_rng(42)
+    cfg = _f32(configs.get_smoke(arch))
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = Model(cfg)
+    params = model.init(jax.random.key(1))
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, PREFILL + DECODE)), jnp.int32)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patch_embeds"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.frontend.num_embeddings, cfg.d_model)) * 0.05,
+            jnp.float32)
+    if cfg.family == "encdec":
+        extra["frame_embeds"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.frontend.num_embeddings, cfg.d_model)) * 0.05,
+            jnp.float32)
+    full = model.forward(params, tokens, extra=extra, remat=False)
+    if isinstance(full, tuple):
+        full = full[0]
+    off = cfg.frontend.num_embeddings if cfg.family == "vlm" else 0
+    geo = model.cache_geometry(B, 64, hbm_fraction=hbm_fraction,
+                               pad_to=1)
+    lg, state = model.prefill(params, tokens[:, :PREFILL], geo, extra=extra)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full[:, off + PREFILL - 1]), atol=2e-3)
+    for t in range(DECODE):
+        lg, state = model.decode_step(params, state, tokens[:, PREFILL + t])
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full[:, off + PREFILL + t]),
+            atol=2e-3)
+
+
+DECODE_ARCHS = [a for a in configs.all_arch_names()
+                if configs.get_smoke(a).family != "xlstm"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward_two_tiers(arch):
+    _run(arch, hbm_fraction=0.3)   # both tiers populated
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "zamba2-1.2b"])
+def test_decode_matches_forward_hbm_only(arch):
+    _run(arch, hbm_fraction=1.0)   # everything fits in HBM
+
+
+def test_xlstm_decode_matches_forward():
+    rng = np.random.default_rng(0)
+    cfg = _f32(configs.get_smoke("xlstm-125m"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(2))
+    S = 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = model.forward(params, tokens, remat=False)
+    state = model.init_decode_state(B)
+    for t in range(S):
+        lg, state = model.decode_step(params, state, tokens[:, t])
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   atol=2e-3)
+
+
+def test_migration_preserves_decode_exactness():
+    """Promote/demote pages mid-decode; logits must be unchanged
+    (placement is a performance decision, never a semantic one)."""
+    from repro.kvcache.migrate import MigrationPlan, apply_migrations
+    rng = np.random.default_rng(9)
+    cfg = _f32(configs.get_smoke("internlm2-1.8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(3))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, PREFILL + 2)),
+                         jnp.int32)
+    full = model.forward(params, tokens, remat=False)
+    geo = model.cache_geometry(B, 64, hbm_fraction=0.5, pad_to=1)
+    _, cache = model.prefill(params, tokens[:, :PREFILL], geo)
+
+    # demote logical page 0 (hbm slot 0) to a free host slot, for every
+    # layer and batch entry
+    moves = []
+    eo = np.asarray(cache.host_owner)
+    for l in range(cache.k_hbm.shape[0]):
+        for b in range(B):
+            free = np.nonzero(eo[l, b] < 0)[0]
+            moves.append((l, b, 0, int(free[0]), 0))
+    plan = MigrationPlan.build(len(moves), [], moves)
+    cache = apply_migrations(cache, plan)
+
+    # control plane must now choose write slots explicitly (the static
+    # logical==slot assumption no longer holds after migration)
+    def free_slots(cache):
+        """Engine-style: reuse the existing mapping when the token's
+        logical page is already allocated, else pick a free slot."""
+        pt = np.asarray(cache.page_table)
+        ho = np.asarray(cache.hbm_owner)
+        eo = np.asarray(cache.host_owner)
+        T = cache.k_hbm.shape[3]
+        logical = int(np.asarray(cache.length)[0]) // T
+        L, Bn = ho.shape[0], ho.shape[1]
+        ws = np.zeros((L, Bn), np.int32)
+        for l in range(L):
+            for b in range(Bn):
+                if pt[l, b, logical] >= 0:
+                    ws[l, b] = pt[l, b, logical]
+                    continue
+                fh = np.nonzero(ho[l, b] < 0)[0]
+                if len(fh):
+                    ws[l, b] = fh[0]
+                else:
+                    fe = np.nonzero(eo[l, b] < 0)[0]
+                    ws[l, b] = ho.shape[2] + fe[0]
+        return jnp.asarray(ws)
+
+    lg, cache = model.decode_step(params, cache, tokens[:, PREFILL],
+                                  write_slot=free_slots(cache))
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full[:, PREFILL]), atol=2e-3)
+
+    # now promote it back INTO A FREE SLOT and decode again
+    ho = np.asarray(cache.hbm_owner)
+    eo = np.asarray(cache.host_owner)
+    moves = []
+    for l in range(cache.k_hbm.shape[0]):
+        for b in range(B):
+            src = np.nonzero(eo[l, b] == 0)[0]
+            free_h = np.nonzero(ho[l, b] < 0)[0]
+            moves.append((l, b, int(src[0]), int(free_h[0]), 0))
+    plan = MigrationPlan.build(len(moves), moves, [])
+    cache = apply_migrations(cache, plan)
+    lg, cache = model.decode_step(params, cache, tokens[:, PREFILL + 1],
+                                  write_slot=free_slots(cache))
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full[:, PREFILL + 1]), atol=2e-3)

@@ -1,0 +1,112 @@
+"""Trip-count-weighted HLO cost analyzer: validated against graphs with
+analytically known FLOP counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze, parse_module
+
+
+def _hlo(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+class TestAnalyzer:
+    def test_plain_matmul(self):
+        spec = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        spec2 = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+        r = analyze(_hlo(lambda a, b: a @ b, spec, spec2))
+        expected = 2 * 128 * 256 * 64
+        assert r["flops"] == pytest.approx(expected, rel=0.1)
+
+    def test_scan_multiplies_trip_count(self):
+        def f(xs):
+            def body(c, x):
+                return c @ x, None
+            c, _ = jax.lax.scan(body, jnp.eye(64, dtype=jnp.float32), xs)
+            return c
+        r = analyze(_hlo(f, jax.ShapeDtypeStruct((12, 64, 64),
+                                                 jnp.float32)))
+        expected = 12 * 2 * 64 ** 3
+        assert r["flops"] == pytest.approx(expected, rel=0.15)
+
+    def test_nested_scan(self):
+        def f(xs):
+            def outer(c, x):
+                def inner(ci, xi):
+                    return ci @ xi, None
+                c2, _ = jax.lax.scan(inner, c, x)
+                return c2, None
+            c, _ = jax.lax.scan(outer, jnp.eye(32, dtype=jnp.float32), xs)
+            return c
+        r = analyze(_hlo(f, jax.ShapeDtypeStruct((3, 5, 32, 32),
+                                                 jnp.float32)))
+        expected = 15 * 2 * 32 ** 3
+        assert r["flops"] == pytest.approx(expected, rel=0.2)
+
+    def test_scan_sliced_weights_bytes_not_inflated(self):
+        """A scan body that dynamic-slices one layer of a stacked weight
+        must charge ~L * one-layer bytes, not L * full-stack bytes."""
+        L, D = 16, 128
+
+        def f(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            c, _ = jax.lax.scan(body, x, ws)
+            return c
+        r = analyze(_hlo(f, jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+                         jax.ShapeDtypeStruct((D, D), jnp.float32)))
+        one_layer = D * D * 4
+        # generous bound: a few tensors of one-layer size per iteration
+        assert r["bytes"] < L * one_layer * 12
+
+    def test_comment_headers_parsed(self):
+        """Computations whose headers contain /*index=N*/ comments (big
+        tuples) must still be discovered."""
+        def f(xs):
+            def body(carry, x):
+                a, b, c = carry
+                return (a @ x, b + 1.0, c * 2.0), None
+            init = (jnp.eye(96, dtype=jnp.float32),
+                    jnp.zeros((4,), jnp.float32),
+                    jnp.ones((3, 3), jnp.float32))
+            out, _ = jax.lax.scan(body, init, xs)
+            return out[0]
+        hlo = _hlo(f, jax.ShapeDtypeStruct((8, 96, 96), jnp.float32))
+        r = analyze(hlo)
+        assert r["flops"] == pytest.approx(8 * 2 * 96 ** 3, rel=0.15)
+
+    def test_collective_parse(self):
+        from repro.launch.roofline import collective_bytes_of_hlo
+        fake = """
+ENTRY %main () -> f32[] {
+  %x = bf16[16,512]{1,0} all-gather(%p), dimensions={0}
+  %y = f32[8,8]{1,0} all-reduce(%q), to_apply=%add
+  %z = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b)
+}
+"""
+        got = collective_bytes_of_hlo(fake)
+        assert got["all-gather"] == 16 * 512 * 2
+        assert got["all-reduce"] == 8 * 8 * 4 * 2      # ring 2x factor
+        assert got["all-to-all"] == 2 * 4 * 4 * 4
+
+
+class TestRooflineDerivation:
+    def test_terms_and_dominance(self):
+        from repro.launch.roofline import roofline_terms
+        rec = {
+            "devices": 256,
+            "flops_per_device": 197e12 * 0.5,      # 0.5 s compute
+            "bytes_per_device": 819e9 * 0.1,       # 0.1 s memory
+            "collective_bytes_per_device": {"total": 50e9 * 0.2},
+            "active_params": 1e9, "batch": 8, "seq": 128,
+            "kind": "train",
+        }
+        t = roofline_terms(rec)
+        assert t["dominant"] == "compute"
+        assert t["compute_s"] == pytest.approx(0.5)
+        assert t["memory_s"] == pytest.approx(0.1)
+        assert t["collective_s"] == pytest.approx(0.2)
+        assert 0 < t["roofline_fraction"] <= 1.0 + 1e-9

@@ -1,0 +1,160 @@
+"""Paged two-tier KV cache: tables, tier lists, migration consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kvcache.migrate import MigrationPlan, apply_migrations
+from repro.kvcache.paged import (
+    CacheGeometry, init_cache, prefill_cache,
+)
+
+
+def _geo(hbm=2, host=4, layers=2, batch=2):
+    return CacheGeometry(num_layers=layers, batch=batch, page_tokens=4,
+                         hbm_pages=hbm, host_pages=host, kv_heads=2,
+                         head_dim=8, dtype=jnp.float32)
+
+
+def _filled_cache(geo, tokens=12, seed=0):
+    rng = np.random.default_rng(seed)
+    L, B = geo.num_layers, geo.batch
+    S = tokens
+    k = jnp.asarray(rng.standard_normal((L, B, S, geo.kv_heads,
+                                         geo.head_dim)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((L, B, S, geo.kv_heads,
+                                         geo.head_dim)), jnp.float32)
+    return prefill_cache(geo, k, v, S), k, v
+
+
+def read_token(cache, geo, l, b, tok):
+    """Fetch token `tok`'s K vector through the page table."""
+    page = tok // geo.page_tokens
+    off = tok % geo.page_tokens
+    slot = int(cache.page_table[l, b, page])
+    assert slot >= 0
+    if slot < geo.hbm_pages:
+        return np.asarray(cache.k_hbm[l, b, slot, off])
+    return np.asarray(cache.k_host[l, b, slot - geo.hbm_pages, off])
+
+
+class TestPrefillCache:
+    def test_tokens_recoverable(self):
+        geo = _geo()
+        cache, k, v = _filled_cache(geo)
+        for l in range(geo.num_layers):
+            for b in range(geo.batch):
+                for t in range(12):
+                    np.testing.assert_array_equal(
+                        read_token(cache, geo, l, b, t),
+                        np.asarray(k[l, b, t]))
+
+    def test_static_fill_order(self):
+        geo = _geo(hbm=2, host=4)
+        cache, _, _ = _filled_cache(geo, tokens=12)   # 3 pages
+        # first 2 pages in HBM, third spills to host
+        assert int(cache.page_table[0, 0, 0]) == 0
+        assert int(cache.page_table[0, 0, 1]) == 1
+        assert int(cache.page_table[0, 0, 2]) == geo.hbm_pages
+
+    def test_tier_lists_consistency(self):
+        geo = _geo()
+        cache, _, _ = _filled_cache(geo, tokens=10)  # 2.5 pages
+        hl, hv, el, ev = cache.tier_lists()
+        # occupied hbm slots are 0 and 1; valid = 4 and 4
+        assert hl[0, 0, 0] == 0 and hl[0, 0, 1] == 1
+        assert hv[0, 0, 0] == 4 and hv[0, 0, 1] == 4
+        # host slot 0 holds page 2 with 2 valid tokens
+        assert el[0, 0, 0] == 0 and ev[0, 0, 0] == 2
+        # free slots are holes
+        assert el[0, 0, 1] == -1 and ev[0, 0, 1] == 0
+
+
+class TestMigration:
+    def test_roundtrip_preserves_data(self):
+        geo = _geo()
+        cache, k, _ = _filled_cache(geo, tokens=12)
+        before = read_token(cache, geo, 0, 0, 1)   # page 0
+        plan = MigrationPlan.build(
+            4, [], [(0, 0, 0, 2, 0)])  # demote page0: hbm slot0 -> host 2
+        cache = apply_migrations(cache, plan)
+        assert int(cache.page_table[0, 0, 0]) == geo.hbm_pages + 2
+        np.testing.assert_array_equal(read_token(cache, geo, 0, 0, 1),
+                                      before)
+        plan = MigrationPlan.build(
+            4, [(0, 0, 2, 0, 0)], [])  # promote back
+        cache = apply_migrations(cache, plan)
+        assert int(cache.page_table[0, 0, 0]) == 0
+        np.testing.assert_array_equal(read_token(cache, geo, 0, 0, 1),
+                                      before)
+
+    def test_empty_plan_noop(self):
+        geo = _geo()
+        cache, _, _ = _filled_cache(geo)
+        plan = MigrationPlan.empty(8)
+        cache2 = apply_migrations(cache, plan)
+        np.testing.assert_array_equal(np.asarray(cache.page_table),
+                                      np.asarray(cache2.page_table))
+        np.testing.assert_array_equal(np.asarray(cache.k_hbm),
+                                      np.asarray(cache2.k_hbm))
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_random_migration_sequences_consistent(self, seed):
+        """After arbitrary valid swaps, page_table and owner maps stay
+        mutually consistent and all tokens remain readable."""
+        rng = np.random.default_rng(seed)
+        geo = _geo(hbm=2, host=4)
+        cache, k, _ = _filled_cache(geo, tokens=12, seed=seed)
+        for _ in range(4):
+            pt = np.asarray(cache.page_table)
+            ho = np.asarray(cache.hbm_owner)
+            eo = np.asarray(cache.host_owner)
+            l = int(rng.integers(0, geo.num_layers))
+            b = int(rng.integers(0, geo.batch))
+            # pick a random demote (occupied hbm slot -> free host slot)
+            occ = np.nonzero(ho[l, b] >= 0)[0]
+            free = np.nonzero(eo[l, b] < 0)[0]
+            if len(occ) and len(free):
+                slot = int(rng.choice(occ))
+                plan = MigrationPlan.build(
+                    2, [], [(l, b, slot, int(free[0]),
+                             int(ho[l, b, slot]))])
+                cache = apply_migrations(cache, plan)
+        # consistency: every alive logical page readable & owners match
+        pt = np.asarray(cache.page_table)
+        ho = np.asarray(cache.hbm_owner)
+        eo = np.asarray(cache.host_owner)
+        for l in range(geo.num_layers):
+            for b in range(geo.batch):
+                for page in range(3):
+                    slot = pt[l, b, page]
+                    assert slot >= 0
+                    if slot < geo.hbm_pages:
+                        assert ho[l, b, slot] == page
+                    else:
+                        assert eo[l, b, slot - geo.hbm_pages] == page
+                for t in range(12):
+                    np.testing.assert_array_equal(
+                        read_token(cache, geo, l, b, t),
+                        np.asarray(k[l, b, t]))
+
+
+class TestGeometry:
+    def test_padding_to_mesh(self):
+        geo = CacheGeometry.for_context(
+            num_layers=2, batch=1, context=32768, kv_heads=8, head_dim=128,
+            hbm_fraction=0.25, pad_to=16)
+        assert geo.hbm_pages % 16 == 0
+        assert geo.host_pages % 16 == 0
+        assert geo.max_tokens >= 32768
+
+    @given(st.integers(64, 100_000), st.floats(0.05, 0.95))
+    @settings(max_examples=30, deadline=None)
+    def test_capacity_sufficient(self, context, frac):
+        geo = CacheGeometry.for_context(
+            num_layers=1, batch=1, context=context, kv_heads=2,
+            head_dim=16, hbm_fraction=frac, pad_to=16)
+        assert geo.max_tokens >= context

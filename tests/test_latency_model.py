@@ -1,0 +1,97 @@
+"""Eq. (1)-(5) latency model: hand-computed cases + property invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import (
+    StepTraffic, dram_latency, hbm_latency, step_latency, total_latency,
+)
+from repro.core.tiers import GH200, MemorySystemSpec, SPECS, TPU_V5E
+
+SIMPLE = MemorySystemSpec(name="simple", hbm_bw=100.0, hbm_capacity=1e9,
+                          link_bw=10.0, dram_bw=20.0, dram_capacity=1e12)
+
+
+class TestHandComputed:
+    def test_eq3_hbm(self):
+        t = StepTraffic(h_read=50.0, h_write=10.0, m_in=20.0, m_out=20.0)
+        assert hbm_latency(t, SIMPLE) == pytest.approx(100.0 / 100.0)
+
+    def test_eq4_read_term_uses_min_bandwidth(self):
+        t = StepTraffic(e_read=40.0)
+        # min(B_k=10, B_d=20) = 10
+        assert dram_latency(t, SIMPLE) == pytest.approx(4.0)
+
+    def test_eq4_max_of_three(self):
+        t = StepTraffic(e_write=10.0, m_in=30.0, m_out=10.0)
+        # link_out = (10+10)/10 = 2 ; link_in = 30/10 = 3
+        # dram_chan = (10+30+10)/20 = 2.5  -> max = 3
+        assert dram_latency(t, SIMPLE) == pytest.approx(3.0)
+
+    def test_eq2_concurrency(self):
+        t = StepTraffic(h_read=200.0, e_read=10.0)
+        # t_h = 2.0, t_e = 1.0 -> max
+        assert step_latency(t, SIMPLE) == pytest.approx(2.0)
+
+    def test_eq1_sum(self):
+        t = StepTraffic(h_read=np.array([100.0, 200.0, 300.0]))
+        assert total_latency(t, SIMPLE) == pytest.approx(6.0)
+
+    def test_gh200_table1_values(self):
+        assert GH200.hbm_bw == pytest.approx(4.9 * 1024**4 / 1e12 * 1e12,
+                                             rel=0.1)
+        assert GH200.link_bw == pytest.approx(900e9)
+        assert GH200.dram_bw == pytest.approx(500e9)
+        assert GH200.effective_dram_read_bw == pytest.approx(500e9)
+
+
+traffic_st = st.builds(
+    StepTraffic,
+    h_read=st.floats(0, 1e12), e_read=st.floats(0, 1e12),
+    h_write=st.floats(0, 1e10), e_write=st.floats(0, 1e10),
+    m_in=st.floats(0, 1e10), m_out=st.floats(0, 1e10))
+
+
+class TestProperties:
+    @given(traffic_st, st.sampled_from(list(SPECS)))
+    @settings(max_examples=100, deadline=None)
+    def test_nonnegative(self, t, spec_name):
+        spec = SPECS[spec_name]
+        assert step_latency(t, spec) >= 0.0
+
+    @given(traffic_st, st.sampled_from(list(SPECS)),
+           st.floats(1.0, 100.0))
+    @settings(max_examples=100, deadline=None)
+    def test_monotone_in_traffic(self, t, spec_name, factor):
+        """Scaling every traffic term up never reduces latency."""
+        spec = SPECS[spec_name]
+        assert step_latency(t.scale(factor), spec) >= \
+            step_latency(t, spec) - 1e-12
+
+    @given(traffic_st, st.sampled_from(list(SPECS)))
+    @settings(max_examples=100, deadline=None)
+    def test_step_is_max_of_tiers(self, t, spec_name):
+        spec = SPECS[spec_name]
+        s = step_latency(t, spec)
+        assert s == pytest.approx(
+            max(float(hbm_latency(t, spec)), float(dram_latency(t, spec))))
+
+    @given(st.floats(1.0, 1e12))
+    @settings(max_examples=50, deadline=None)
+    def test_hbm_faster_than_dram_for_reads(self, nbytes):
+        """Same bytes read from HBM must not be slower than from DRAM."""
+        th = step_latency(StepTraffic(h_read=nbytes), TPU_V5E)
+        te = step_latency(StepTraffic(e_read=nbytes), TPU_V5E)
+        assert th <= te
+
+    @given(st.floats(1e3, 1e12), st.floats(0.0, 1.0))
+    @settings(max_examples=100, deadline=None)
+    def test_tier_splitting_never_worse_than_worst_tier(self, nbytes, frac):
+        """Splitting reads across concurrent tiers is bounded by putting
+        everything on the slow tier (the aggregation premise)."""
+        split = StepTraffic(h_read=nbytes * frac,
+                            e_read=nbytes * (1 - frac))
+        all_dram = StepTraffic(e_read=nbytes)
+        assert step_latency(split, GH200) <= \
+            step_latency(all_dram, GH200) + 1e-12

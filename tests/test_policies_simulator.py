@@ -1,0 +1,162 @@
+"""Placement policies + behavioral simulator invariants (paper §IV)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.experiment import Workload, make_sim, run_strategy, tune_sa
+from repro.core.placement import (
+    POLICIES, BeladyOracle, QuestPages, ReactiveLRU, SAGuided,
+    StaticPlacement,
+)
+from repro.core.sa import SAConfig
+from repro.core.simulator import HeteroMemSimulator
+from repro.core.tiers import GH200, TPU_V5E
+from repro.core.traces import synthetic_trace
+
+WL = Workload(bytes_per_token_layer=2 * 8 * 128 * 2, num_layers=4)
+
+
+def small_trace(sparsity=0.7, variation=0.3, seed=0):
+    return synthetic_trace(prompt_len=2048, decode_len=200, page_tokens=16,
+                           sparsity=sparsity, variation=variation, seed=seed)
+
+
+def budget_for(tr, frac=0.25):
+    total = (tr.prompt_len + tr.decode_len) * WL.bytes_per_token_layer \
+        * WL.num_layers
+    return frac * total
+
+
+class TestCapacityInvariant:
+    @pytest.mark.parametrize("policy_name",
+                             ["static", "reactive", "quest", "belady",
+                              "cost_aware"])
+    def test_hbm_never_exceeds_budget(self, policy_name):
+        tr = small_trace()
+        policy = POLICIES[policy_name]()
+        sim = make_sim(tr, GH200, policy, WL, budget_for(tr))
+        budget = sim.hbm_budget_pages
+        # instrument: check after every step via monkeypatched loop
+        orig = sim._apply_migrations
+
+        def checked(promote, demote):
+            r = orig(promote, demote)
+            assert sim.hbm_used <= budget
+            assert (sim.placement == 0).sum() == sim.hbm_used
+            return r
+
+        sim._apply_migrations = checked
+        sim.run()
+        assert sim.hbm_used <= budget
+
+    @given(st.integers(1, 40), st.floats(0.0, 1.0))
+    @settings(max_examples=15, deadline=None)
+    def test_sa_policy_capacity(self, window, ratio):
+        tr = small_trace(seed=3)
+        sim = make_sim(tr, GH200, SAGuided(window, ratio), WL,
+                       budget_for(tr))
+        sim.run()
+        assert sim.hbm_used <= sim.hbm_budget_pages
+
+
+class TestStrategyOrdering:
+    def test_unlimited_hit_rate_is_one(self):
+        tr = small_trace()
+        r = run_strategy("unlimited", tr, GH200, WL, budget_for(tr))
+        assert r.hbm_hit_rate == pytest.approx(1.0)
+
+    def test_static_never_migrates(self):
+        tr = small_trace()
+        r = run_strategy("static", tr, GH200, WL, budget_for(tr))
+        assert r.migrated_bytes == 0.0
+
+    def test_oracles_beat_static(self):
+        """The paper's core claim, in miniature: foresight-guided
+        placement beats static on a clustered trace."""
+        tr = small_trace(sparsity=0.75)
+        b = budget_for(tr)
+        static = run_strategy("static", tr, GH200, WL, b)
+        quest = run_strategy("quest", tr, GH200, WL, b)
+        sa = run_strategy("sa", tr, GH200, WL, b,
+                          sa_cfg=SAConfig(max_evaluations=40, seed=0))
+        assert quest.total_latency_s < static.total_latency_s
+        assert sa.total_latency_s < static.total_latency_s
+
+    def test_hit_rate_conservation(self):
+        tr = small_trace()
+        r = run_strategy("reactive", tr, GH200, WL, budget_for(tr))
+        assert 0.0 <= r.hbm_hit_rate <= 1.0
+        assert r.read_bytes_hbm + r.read_bytes_dram > 0
+
+    def test_gap_narrows_at_high_sparsity(self):
+        """Fig. 3 shape: SA/reactive ratio smaller at 0.9 than at 0.6."""
+        b = None
+        ratios = {}
+        for sp in (0.6, 0.9):
+            tr = small_trace(sparsity=sp)
+            b = budget_for(tr)
+            reactive = run_strategy("reactive", tr, GH200, WL, b)
+            sa = run_strategy("sa", tr, GH200, WL, b,
+                              sa_cfg=SAConfig(max_evaluations=30, seed=1))
+            ratios[sp] = reactive.total_latency_s / sa.total_latency_s
+        assert ratios[0.9] < ratios[0.6]
+
+
+class TestSAOptimizer:
+    def test_anneal_converges_on_toy(self):
+        from repro.core.sa import anneal
+        # convex bowl with optimum at W=16, R=0.5
+        calls = []
+
+        def obj(w, r):
+            calls.append((w, r))
+            return (w - 16) ** 2 + 40 * (r - 0.5) ** 2 + 1.0
+
+        res = anneal(obj, init=(4, 0.0),
+                     cfg=SAConfig(max_evaluations=200, seed=0))
+        w, r = res.best_state
+        assert abs(w - 16) <= 4
+        assert abs(r - 0.5) <= 0.2
+        assert res.evaluations <= 200
+
+    def test_proposal_attribution_present(self):
+        from repro.core.sa import anneal
+        res = anneal(lambda w, r: abs(w - 10) + abs(r - 0.3),
+                     cfg=SAConfig(max_evaluations=100, seed=2))
+        assert set(res.accept_attribution) == {"dW", "dR", "dWdR"}
+
+    def test_memoization(self):
+        from repro.core.sa import anneal
+        seen = set()
+        uniq = []
+
+        def obj(w, r):
+            key = (w, round(r, 3))
+            assert key not in seen, "objective re-evaluated"
+            seen.add(key)
+            return float(abs(w - 8)) + abs(r - 0.5)
+
+        anneal(obj, cfg=SAConfig(max_evaluations=60, seed=3))
+
+
+class TestTraces:
+    @given(st.floats(0.3, 0.95), st.floats(0.0, 1.0), st.integers(0, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_no_access_before_birth(self, sp, var, seed):
+        tr = synthetic_trace(prompt_len=512, decode_len=64,
+                             sparsity=sp, variation=var, seed=seed)
+        tr.validate()   # raises on violation
+
+    def test_sparsity_targets_realized(self):
+        tr = synthetic_trace(prompt_len=4096, decode_len=128, sparsity=0.8,
+                             variation=0.2, seed=0)
+        assert abs(tr.sparsity - 0.8) < 0.1
+
+    def test_trace_from_scores(self):
+        from repro.core.traces import trace_from_scores
+        rng = np.random.default_rng(0)
+        scores = rng.random((32, 1024)) * (rng.random((32, 1024)) < 0.2)
+        tr = trace_from_scores(scores, prompt_len=1000, sparsity=0.7)
+        tr.validate()
+        assert tr.num_steps == 32

@@ -1,0 +1,154 @@
+"""Recurrent-family numerics: chunked parallel forms vs sequential
+oracles vs one-token decode (Mamba2 SSD, mLSTM, sLSTM)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm, xlstm
+from repro.models.config import ModelConfig, SSMConfig, XLSTMConfig
+from repro.models.params import init_params
+
+
+def _ssm_cfg(chunk=8, heads=4, d=64, N=16):
+    return ModelConfig(name="t", family="ssm", num_layers=1, d_model=d,
+                       num_heads=heads, kv_heads=heads, d_ff=0, vocab=64,
+                       head_dim=d // heads, dtype=jnp.float32,
+                       param_dtype=jnp.float32,
+                       ssm=SSMConfig(state_dim=N, conv_width=4, expand=2,
+                                     chunk=chunk))
+
+
+def _xl_cfg(chunk=8, heads=4, d=64):
+    return ModelConfig(name="t", family="xlstm", num_layers=1, d_model=d,
+                       num_heads=heads, kv_heads=heads, d_ff=0, vocab=64,
+                       head_dim=d // heads, dtype=jnp.float32,
+                       param_dtype=jnp.float32,
+                       xlstm=XLSTMConfig(slstm_every=2, expand=2,
+                                         conv_width=4, chunk=chunk))
+
+
+class TestMamba2:
+    @pytest.mark.parametrize("S,chunk", [(32, 8), (40, 8), (16, 16),
+                                         (17, 8)])
+    def test_chunked_vs_sequential(self, S, chunk):
+        cfg = _ssm_cfg(chunk=chunk)
+        params = init_params(ssm.mamba2_schema(cfg, 1), jax.random.key(0),
+                             jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], params)
+        rng = np.random.default_rng(S)
+        h = jnp.asarray(rng.standard_normal((2, S, cfg.d_model)),
+                        jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ssm.mamba2_forward_layer(h, lp, cfg)),
+            np.asarray(ssm.mamba2_forward_layer_ref(h, lp, cfg)),
+            atol=1e-4)
+
+    def test_state_handoff(self):
+        """forward(return_state) -> decode continues exactly."""
+        cfg = _ssm_cfg()
+        params = init_params(ssm.mamba2_schema(cfg, 1), jax.random.key(1),
+                             jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], params)
+        rng = np.random.default_rng(0)
+        h = jnp.asarray(rng.standard_normal((1, 24, cfg.d_model)),
+                        jnp.float32)
+        full = ssm.mamba2_forward_layer_ref(h, lp, cfg)
+        out16, (s, conv) = ssm.mamba2_forward_layer(h[:, :16], lp, cfg,
+                                                    return_state=True)
+        for t in range(16, 24):
+            y, s, conv = ssm.mamba2_decode_layer(h[:, t], lp, cfg, s, conv)
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(full[:, t]), atol=1e-4)
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_decay_bounded(self, seed):
+        """State never blows up: decay factors are in (0, 1]."""
+        cfg = _ssm_cfg()
+        params = init_params(ssm.mamba2_schema(cfg, 1),
+                             jax.random.key(seed), jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], params)
+        rng = np.random.default_rng(seed)
+        h = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)) * 3,
+                        jnp.float32)
+        y = ssm.mamba2_forward_layer(h, lp, cfg)
+        assert np.isfinite(np.asarray(y)).all()
+
+
+class TestMLSTM:
+    @pytest.mark.parametrize("S,chunk", [(32, 8), (24, 8), (16, 16)])
+    def test_chunked_vs_sequential(self, S, chunk):
+        cfg = _xl_cfg(chunk=chunk)
+        params = init_params(xlstm.mlstm_schema(cfg, 1), jax.random.key(0),
+                             jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], params)
+        rng = np.random.default_rng(S)
+        h = jnp.asarray(rng.standard_normal((2, S, cfg.d_model)),
+                        jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(xlstm.mlstm_forward_layer(h, lp, cfg)),
+            np.asarray(xlstm.mlstm_forward_layer_ref(h, lp, cfg)),
+            atol=1e-4)
+
+    def test_decode_matches_forward(self):
+        cfg = _xl_cfg()
+        params = init_params(xlstm.mlstm_schema(cfg, 1), jax.random.key(2),
+                             jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], params)
+        rng = np.random.default_rng(1)
+        S = 16
+        h = jnp.asarray(rng.standard_normal((2, S, cfg.d_model)),
+                        jnp.float32)
+        full = xlstm.mlstm_forward_layer_ref(h, lp, cfg)
+        inner = cfg.xlstm.expand * cfg.d_model
+        H, P = cfg.num_heads, inner // cfg.num_heads
+        state = (jnp.zeros((2, H, P, P)), jnp.zeros((2, H, P)),
+                 jnp.full((2, H), -1e30),
+                 jnp.zeros((2, cfg.xlstm.conv_width - 1, inner)))
+        for t in range(S):
+            y, state = xlstm.mlstm_decode_layer(h[:, t], lp, cfg, state)
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(full[:, t]), atol=1e-4)
+
+    def test_large_gates_stable(self):
+        """Exponential input gates with extreme pre-activations must not
+        overflow (the stabilizer m_t recurrence)."""
+        cfg = _xl_cfg()
+        params = init_params(xlstm.mlstm_schema(cfg, 1), jax.random.key(3),
+                             jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], params)
+        lp = dict(lp)
+        lp["bi"] = lp["bi"] + 60.0    # huge input gate bias
+        rng = np.random.default_rng(2)
+        h = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)),
+                        jnp.float32)
+        y = xlstm.mlstm_forward_layer(h, lp, cfg)
+        assert np.isfinite(np.asarray(y)).all()
+        y_ref = xlstm.mlstm_forward_layer_ref(h, lp, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-3)
+
+
+class TestSLSTM:
+    def test_decode_matches_forward(self):
+        cfg = _xl_cfg()
+        params = init_params(xlstm.slstm_schema(cfg, 1), jax.random.key(4),
+                             jnp.float32)
+        lp = jax.tree.map(lambda a: a[0], params)
+        rng = np.random.default_rng(3)
+        S = 12
+        h = jnp.asarray(rng.standard_normal((2, S, cfg.d_model)),
+                        jnp.float32)
+        full = xlstm.slstm_forward_layer(h, lp, cfg)
+        H, P = cfg.num_heads, cfg.d_model // cfg.num_heads
+        z = jnp.zeros((2, H, P))
+        state = (z, z, jnp.full((2, H, P), -1e30), z)
+        for t in range(S):
+            y, state = xlstm.slstm_decode_layer(h[:, t], lp, cfg, state)
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(full[:, t]), atol=1e-4)

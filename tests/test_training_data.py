@@ -1,0 +1,133 @@
+"""Training step, chunked loss, grad accumulation, data determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models.model import Model
+from repro.training.train_step import (
+    init_train_state, loss_fn, make_train_step,
+)
+
+
+def _model():
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_smoke("internlm2-1.8b"),
+                              dtype=jnp.float32, param_dtype=jnp.float32)
+    return Model(cfg)
+
+
+class TestLoss:
+    def test_chunked_equals_naive(self):
+        model = _model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.integers(0, model.cfg.vocab, (2, 33)),
+                             jnp.int32)
+        chunked = loss_fn(model, params, tokens, logit_chunk=8)
+        naive = loss_fn(model, params, tokens, logit_chunk=512)
+        np.testing.assert_allclose(float(chunked), float(naive), rtol=1e-5)
+
+    def test_loss_near_log_vocab_at_init(self):
+        model = _model()
+        params = model.init(jax.random.key(1))
+        rng = np.random.default_rng(1)
+        tokens = jnp.asarray(rng.integers(0, model.cfg.vocab, (4, 32)),
+                             jnp.int32)
+        loss = float(loss_fn(model, params, tokens))
+        assert abs(loss - np.log(model.cfg.vocab)) < 1.0
+
+    def test_loss_decreases(self):
+        model = _model()
+        state = init_train_state(model, jax.random.key(0))
+        step = jax.jit(make_train_step(model, lr=5e-3))
+        corpus = SyntheticCorpus(DataConfig(vocab=model.cfg.vocab,
+                                            seq_len=32, global_batch=4))
+        losses = []
+        for i in range(10):
+            state, m = step(state, {"tokens": jnp.asarray(
+                corpus.batch(0, i)["tokens"])})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+
+class TestGradAccumulation:
+    def test_accum_matches_full_batch(self):
+        model = _model()
+        state = init_train_state(model, jax.random.key(0))
+        rng = np.random.default_rng(2)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, model.cfg.vocab, (4, 24)), jnp.int32)}
+        s1, m1 = jax.jit(make_train_step(model, lr=1e-3))(state, batch)
+        s2, m2 = jax.jit(make_train_step(model, accum_steps=2,
+                                         lr=1e-3))(state, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-5)
+        for a, b in zip(jax.tree.leaves(s1.params),
+                        jax.tree.leaves(s2.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)
+
+
+class TestOptimizer:
+    def test_adamw_moves_toward_minimum(self):
+        from repro.training.optimizer import adamw_init, adamw_update
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = adamw_init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}   # d/dw w^2
+            params, opt = adamw_update(grads, opt, params, lr=0.05,
+                                       weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.5
+
+    def test_grad_clip(self):
+        from repro.training.optimizer import adamw_init, adamw_update
+        params = {"w": jnp.zeros(3)}
+        opt = adamw_init(params)
+        huge = {"w": jnp.full(3, 1e9)}
+        p2, _ = adamw_update(huge, opt, params, lr=0.1, grad_clip=1.0,
+                             weight_decay=0.0)
+        # first-step Adam update magnitude is bounded by ~lr
+        assert float(jnp.abs(p2["w"]).max()) < 0.2
+
+
+class TestData:
+    def test_determinism(self):
+        cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=7)
+        a = SyntheticCorpus(cfg).batch(0, 5)["tokens"]
+        b = SyntheticCorpus(cfg).batch(0, 5)["tokens"]
+        np.testing.assert_array_equal(a, b)
+
+    def test_shards_differ(self):
+        cfg = DataConfig(vocab=100, seq_len=16, global_batch=8,
+                         num_shards=2)
+        c = SyntheticCorpus(cfg)
+        assert not np.array_equal(c.batch(0, 0)["tokens"],
+                                  c.batch(1, 0)["tokens"])
+
+    def test_skip_ahead_recovery(self):
+        """Any worker can recompute any other worker's batch at any
+        step — the straggler/failure recovery property."""
+        cfg = DataConfig(vocab=100, seq_len=8, global_batch=4,
+                         num_shards=2, seed=3)
+        worker_a = SyntheticCorpus(cfg)
+        worker_b = SyntheticCorpus(cfg)   # fresh process after failure
+        np.testing.assert_array_equal(worker_a.batch(1, 17)["tokens"],
+                                      worker_b.batch(1, 17)["tokens"])
+
+    def test_has_structure(self):
+        """n-gram structure means the corpus is learnable (non-uniform)."""
+        cfg = DataConfig(vocab=50, seq_len=64, global_batch=8)
+        toks = SyntheticCorpus(cfg).batch(0, 0)["tokens"]
+        # successor entropy should be far below uniform
+        pairs = {}
+        for row in toks:
+            for a, b in zip(row[:-1], row[1:]):
+                pairs.setdefault(int(a), []).append(int(b))
+        repeat_frac = np.mean([
+            max(np.bincount(v).max() / len(v), 0.0)
+            for v in pairs.values() if len(v) >= 3])
+        assert repeat_frac > 0.3
