@@ -6,6 +6,10 @@ attention sparsity on and off.
 
 `derived` = modeled tokens/s (higher is better); us_per_call = wall
 time per engine step on this CPU host (not the modeled latency).
+
+Decode runs through the fused hot path (`ServingEngine.generate`:
+lax.scan over telemetry_stride steps per dispatch); the wall-clock
+fused-vs-eager comparison lives in benchmarks/perf_engine.py.
 """
 
 from __future__ import annotations
@@ -35,13 +39,12 @@ def run(print_csv: bool = True, steps: int = 24):
             eng = ServingEngine(model, params, EngineConfig(
                 max_context=256, hbm_fraction=0.25, policy=policy,
                 attention_sparsity=sparsity, spec=GH200,
-                promote_thresh=0.005))
+                promote_thresh=0.005, telemetry_stride=steps))
             eng.start(prompts)
             tok = jnp.array([1, 2], jnp.int32)
             t0 = time.time()
-            for _ in range(steps):
-                lg = eng.step(tok)
-                tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            out = eng.generate(tok, steps)
+            jax.block_until_ready(out)
             wall_us = (time.time() - t0) / steps * 1e6
             s = eng.summary()
             rows.append((

@@ -1,0 +1,227 @@
+"""Wall-clock decode throughput for the live serving engine.
+
+Three drive modes over the SAME model and two-tier paged cache:
+
+  host   — replica of the pre-fusion engine step: per-step host
+           round-trips of page_table/owners/importance, nested Python
+           [L, B] loops for write-slot choice and migration planning,
+           and a `MigrationPlan` whose capacity varies with the step's
+           promote/demote count (so `apply_migrations` recompiles for
+           nearly every distinct count). This is the baseline the fused
+           hot path was built to kill — kept here, not in the engine,
+           so the win stays measurable PR over PR.
+  eager  — `ServingEngine.step`: the whole step (vectorized control
+           plane + decode + fixed-capacity migration) is ONE jitted
+           call, but the host dispatches and syncs telemetry per token.
+  fused  — `ServingEngine.generate`: `lax.scan` over telemetry_stride
+           steps per dispatch, cache donated, one telemetry readback
+           per chunk.
+
+Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite). The headline
+is fused/host steps-per-second; fused executable counts are asserted to
+stay at one compile per scan length (zero migration-driven retraces).
+
+Run:  PYTHONPATH=src python benchmarks/perf_engine.py
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.tiers import GH200
+from repro.kvcache.migrate import MigrationPlan, apply_migrations
+from repro.models.model import Model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+STEPS = 64          # multiple of STRIDE: scan lengths compile once in warmup
+STRIDE = 32
+HOST_STEPS = 8          # the host baseline is too slow for more
+
+
+# --------------------------------------------------------------------------- #
+# seed-style host-side control plane (verbatim behavior of the old engine)
+# --------------------------------------------------------------------------- #
+
+class HostLoopEngine(ServingEngine):
+    """Pre-fusion reference: host control plane, unfused data plane."""
+
+    def step(self, token):
+        from repro.serving.engine import _set_cache
+        write_slot = self._host_control_plane(self._cache)
+        logits, state = self.model.decode_step(
+            self.params, self.state, token, write_slot=write_slot)
+        self.state = state
+        plan, n_pro, n_dem = self._host_plan_migrations(self._cache)
+        # read traffic is priced on post-decode, PRE-migration residency,
+        # matching the fused engine's accounting
+        self._record_host(n_pro, n_dem)
+        if plan is not None:
+            self.state = _set_cache(
+                self.state, apply_migrations(self._cache, plan))
+        return logits
+
+    def _host_control_plane(self, cache):
+        geo = self.geo
+        length = int(np.asarray(cache.length)[0])
+        T = geo.page_tokens
+        logical = min(length // T, geo.max_pages - 1)
+        pt = np.asarray(cache.page_table)
+        ho = np.asarray(cache.hbm_owner)
+        eo = np.asarray(cache.host_owner)
+        L, B = pt.shape[0], pt.shape[1]
+        ws = np.zeros((L, B), np.int32)
+        for l in range(L):
+            for b in range(B):
+                if pt[l, b, logical] >= 0:
+                    ws[l, b] = pt[l, b, logical]
+                else:
+                    free_h = np.nonzero(ho[l, b] < 0)[0]
+                    if len(free_h):
+                        ws[l, b] = free_h[0]
+                    else:
+                        free_e = np.nonzero(eo[l, b] < 0)[0]
+                        ws[l, b] = geo.hbm_pages + (
+                            free_e[0] if len(free_e) else geo.host_pages - 1)
+        return jnp.asarray(ws)
+
+    def _host_plan_migrations(self, cache):
+        imp = np.asarray(cache.importance)
+        ho = np.asarray(cache.hbm_owner)
+        eo = np.asarray(cache.host_owner)
+        L, B = ho.shape[0], ho.shape[1]
+        budget = max(1, int(self.cfg.migration_budget_frac
+                            * self.geo.hbm_pages))
+        promotes, demotes = [], []
+        for l in range(L):
+            for b in range(B):
+                host_pages = np.nonzero(eo[l, b] >= 0)[0]
+                if not len(host_pages):
+                    continue
+                host_logical = eo[l, b, host_pages]
+                host_imp = imp[l, b, host_logical]
+                order = np.argsort(-host_imp, kind="stable")
+                hot = [(host_pages[i], host_logical[i], host_imp[i])
+                       for i in order[:budget]
+                       if host_imp[i] > self.cfg.promote_thresh]
+                if not hot:
+                    continue
+                hbm_pages = np.nonzero(ho[l, b] >= 0)[0]
+                hbm_logical = ho[l, b, hbm_pages]
+                hbm_imp = imp[l, b, hbm_logical]
+                cold_order = np.argsort(hbm_imp, kind="stable")
+                free = np.nonzero(ho[l, b] < 0)[0].tolist()
+                ci = 0
+                for src, logical, h_imp in hot:
+                    if free:
+                        dst = free.pop(0)
+                    elif ci < len(cold_order):
+                        victim = cold_order[ci]
+                        if hbm_imp[victim] >= h_imp:
+                            break
+                        vslot = hbm_pages[victim]
+                        demotes.append((l, b, vslot, src,
+                                        hbm_logical[victim]))
+                        dst = vslot
+                        ci += 1
+                    else:
+                        break
+                    promotes.append((l, b, src, dst, logical))
+        if not promotes and not demotes:
+            return None, 0, 0
+        # the step-varying capacity that forced per-step recompiles
+        cap = max(len(promotes), len(demotes), 1)
+        plan = MigrationPlan.build(cap, promotes, demotes)
+        return plan, len(promotes), len(demotes)
+
+    def _record_host(self, n_pro, n_dem):
+        cache = self._cache
+        h_pages = int(np.asarray((cache.hbm_owner >= 0).sum()))
+        e_pages = int(np.asarray((cache.host_owner >= 0).sum()))
+        self._record(np.asarray([[h_pages, e_pages, n_pro, n_dem]]))
+
+
+# --------------------------------------------------------------------------- #
+
+def _engine(model, params, policy, klass=ServingEngine, batch=2):
+    eng = klass(model, params, EngineConfig(
+        max_context=512, hbm_fraction=0.25, policy=policy,
+        attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4,
+        telemetry_stride=STRIDE))
+    rng = np.random.default_rng(0)
+    # the prompt spills past the HBM pool so migrations actually fire
+    prompts = jnp.asarray(rng.integers(0, model.cfg.vocab, (batch, 272)),
+                          jnp.int32)
+    eng.start(prompts)
+    return eng
+
+
+def _time_steps(eng, steps):
+    tok = jnp.array([1, 2], jnp.int32)
+    tok = jnp.argmax(eng.step(tok), -1).astype(jnp.int32)   # compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        tok = jnp.argmax(eng.step(tok), -1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    return steps / (time.perf_counter() - t0)
+
+
+def _time_fused(eng, steps):
+    eng.generate(jnp.array([1, 2], jnp.int32), STRIDE)      # compile
+    tok = jnp.array([3, 4], jnp.int32)
+    t0 = time.perf_counter()
+    out = eng.generate(tok, steps)
+    jax.block_until_ready(out)
+    return steps / (time.perf_counter() - t0)
+
+
+def run(print_csv: bool = True, steps: int = STEPS):
+    cfg = configs.get_smoke("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    result = {"steps": steps, "stride": STRIDE, "rows": {}}
+    rows = []
+    for policy in ("static", "importance"):
+        host_sps = _time_steps(
+            _engine(model, params, policy, HostLoopEngine), HOST_STEPS)
+        eager_eng = _engine(model, params, policy)
+        eager_sps = _time_steps(eager_eng, steps)
+        fused_eng = _engine(model, params, policy)
+        fused_sps = _time_fused(fused_eng, steps)
+        # zero migration-driven retraces: one executable for the eager
+        # step, one per distinct scan length for the fused loop
+        assert eager_eng._step_jit._cache_size() == 1, \
+            eager_eng._step_jit._cache_size()
+        assert fused_eng._gen_jit._cache_size() == 1, \
+            fused_eng._gen_jit._cache_size()
+        result["rows"][policy] = {
+            "host_steps_per_s": host_sps,
+            "eager_steps_per_s": eager_sps,
+            "fused_steps_per_s": fused_sps,
+            "fused_speedup_vs_host": fused_sps / host_sps,
+            "fused_speedup_vs_eager": fused_sps / eager_sps,
+            "eager_step_executables": eager_eng._step_jit._cache_size(),
+            "fused_gen_executables": fused_eng._gen_jit._cache_size(),
+        }
+        for mode, sps in (("host", host_sps), ("eager", eager_sps),
+                          ("fused", fused_sps)):
+            rows.append((f"perf/{policy}/{mode}", 1e6 / sps, sps))
+        rows.append((f"perf/{policy}/fused_vs_host", 0.0,
+                     fused_sps / host_sps))
+
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(result, f, indent=2)
+    if print_csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived:.3f}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -46,11 +46,9 @@ def main():
             attention_sparsity=sparsity, spec=GH200,
             promote_thresh=0.005))
         eng.start(prompts)
+        # fused hot path: one lax.scan dispatch per telemetry_stride steps
         tok = jnp.argmax(eng.step(prompts[:, -1]), -1).astype(jnp.int32)
-        generated = [tok]
-        for _ in range(31):
-            tok = jnp.argmax(eng.step(tok), -1).astype(jnp.int32)
-            generated.append(tok)
+        generated = eng.generate(tok, 31)
         s = eng.summary()
         print(f"policy={policy:11s} modeled {s['modeled_tokens_per_s']:12.0f}"
               f" tok/s  hit={s['mean_hbm_hit_rate']:.2f}"

@@ -1,4 +1,4 @@
-"""Sharded pytree checkpoints: msgpack manifest + zstd-compressed chunks.
+"""Sharded pytree checkpoints: msgpack manifest + compressed chunks.
 
 Design goals (1000+-node posture, no orbax in this environment):
   * layout-independent restore — arrays are stored as logical full
@@ -10,7 +10,11 @@ Design goals (1000+-node posture, no orbax in this environment):
     a torn write can never be mistaken for a valid checkpoint;
   * multi-host writes — each process saves only the shards it owns
     (`process_slice`), and any process can assemble the full tensor at
-    restore because chunk files are addressed by global offset.
+    restore because chunk files are addressed by global offset;
+  * no hard compressor dependency — chunks are zstd-compressed when
+    `zstandard` is importable, else zlib (stdlib). The manifest records
+    the codec, so either writer's checkpoints restore anywhere zstd is
+    available, and zlib checkpoints restore everywhere.
 """
 
 from __future__ import annotations
@@ -24,9 +28,39 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # zlib fallback keeps checkpoints working
+    zstd = None
 
 _CHUNK = 64 * 1024 * 1024   # 64 MB logical chunks
+
+DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
+
+
+def _compressor(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError("codec 'zstd' requested but the zstandard "
+                               "package is not installed")
+        return zstd.ZstdCompressor(level=3).compress
+    if codec == "zlib":
+        return lambda raw: zlib.compress(raw, 6)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the zstandard "
+                "package is not installed; re-save with codec='zlib' "
+                "or install zstandard to restore it")
+        return zstd.ZstdDecompressor().decompress
+    if codec == "zlib":
+        return zlib.decompress
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _path_str(path) -> str:
@@ -41,20 +75,22 @@ def _path_str(path) -> str:
     return "/".join(out)
 
 
-def save_pytree(tree: Any, directory: str) -> None:
+def save_pytree(tree: Any, directory: str,
+                codec: Optional[str] = None) -> None:
+    codec = codec or DEFAULT_CODEC
+    compress = _compressor(codec)
     os.makedirs(directory, exist_ok=True)
-    cctx = zstd.ZstdCompressor(level=3)
-    manifest = {"leaves": []}
+    manifest = {"leaves": [], "codec": codec}
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in leaves:
         name = _path_str(path)
         arr = np.asarray(jax.device_get(leaf))
-        fname = name.replace("/", ".") + ".zst"
+        fname = name.replace("/", ".") + "." + codec
         raw = arr.tobytes()
         chunks = []
         with open(os.path.join(directory, fname), "wb") as f:
             for off in range(0, max(len(raw), 1), _CHUNK):
-                blob = cctx.compress(raw[off:off + _CHUNK])
+                blob = compress(raw[off:off + _CHUNK])
                 chunks.append({"off": off, "nbytes": len(blob),
                                "crc": zlib.crc32(blob)})
                 f.write(struct.pack("<I", len(blob)))
@@ -90,7 +126,8 @@ def restore_pytree(target: Any, directory: str,
     with open(os.path.join(directory, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     by_name = {l["name"]: l for l in manifest["leaves"]}
-    dctx = zstd.ZstdDecompressor()
+    # manifests from before the codec field were always zstd
+    decompress = _decompressor(manifest.get("codec", "zstd"))
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
@@ -106,7 +143,7 @@ def restore_pytree(target: Any, directory: str,
                 blob = f.read(n)
                 assert zlib.crc32(blob) == ch["crc"], \
                     f"corrupt chunk in {name}"
-                buf.extend(dctx.decompress(blob))
+                buf.extend(decompress(blob))
         arr = np.frombuffer(bytes(buf), dtype=meta["dtype"]) \
             .reshape(meta["shape"])
         want_dtype = jnp.dtype(leaf.dtype)

@@ -42,6 +42,8 @@ class SimResult:
     include_weights: bool
 
     def speedup_over(self, other: "SimResult") -> float:
+        if self.total_latency_s == 0.0:
+            return float("inf") if other.total_latency_s > 0.0 else 1.0
         return other.total_latency_s / self.total_latency_s
 
 
@@ -109,9 +111,6 @@ class HeteroMemSimulator:
         self.placement[to_hbm] = HBM
         self.placement[to_dram] = DRAM
         self.hbm_used += len(to_hbm)
-        # Newly written bytes this step: one token's KV (the page that the
-        # fresh token lands in), charged to that page's tier.
-        h_w = e_w = 0.0
         return len(to_hbm), len(to_dram)
 
     # -- main loop -----------------------------------------------------------
@@ -119,11 +118,20 @@ class HeteroMemSimulator:
         tr, spec = self.trace, self.spec
         self.policy.reset(self)
 
+        # Group pages by birth step ONCE (one argsort) instead of scanning
+        # `page_born == s` every step — the per-step scan made long-trace
+        # policy sweeps quadratic in trace length.
+        born_order = np.argsort(tr.page_born, kind="stable").astype(np.int64)
+        born_starts = np.searchsorted(tr.page_born, np.arange(
+            tr.num_steps + 1), sorter=born_order)
+
+        def born_at(s: int) -> np.ndarray:
+            return born_order[born_starts[s]:born_starts[s + 1]]
+
         # Pages alive at step 0 (the prompt) are placed before decoding
         # starts; the paper charges prefill placement to the prefill stage,
         # so we do not count these writes in decode latency.
-        born0 = np.nonzero(tr.page_born == 0)[0]
-        self._place_new(born0)
+        self._place_new(born_at(0))
 
         steps = tr.num_steps
         lat = np.zeros(steps, dtype=np.float64)
@@ -136,11 +144,10 @@ class HeteroMemSimulator:
         for s in range(steps):
             self.step = s
             # 1. new pages born this step
-            n_hbm_new = n_dram_new = 0
             if s > 0:
-                born = np.nonzero(tr.page_born == s)[0]
+                born = born_at(s)
                 if len(born):
-                    n_hbm_new, n_dram_new = self._place_new(born)
+                    self._place_new(born)
             # one decoded token's KV is appended every step
             new_tier_hbm = self.placement[_newest_page(tr, s)] == HBM
             h_write = self.bytes_per_token if new_tier_hbm else 0.0

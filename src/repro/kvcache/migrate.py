@@ -51,7 +51,14 @@ class MigrationPlan:
 
     @classmethod
     def build(cls, capacity: int, promotes, demotes) -> "MigrationPlan":
-        """promotes/demotes: iterables of (layer, batch, src, dst, logical)."""
+        """promotes/demotes: iterables of (layer, batch, src, dst, logical).
+
+        `capacity` must be a per-geometry constant (see
+        `repro.serving.control.plan_capacity`), NOT derived from the
+        number of rows — a row-count capacity gives `apply_migrations`
+        a different traced shape on nearly every step and recompiles it
+        for each distinct promote/demote count.
+        """
         import numpy as np
 
         def pack(rows):
@@ -75,7 +82,15 @@ def _oob(idx, ok, bound):
 
 def apply_migrations(cache: PagedKVCache,
                      plan: MigrationPlan) -> PagedKVCache:
-    """Execute demotions then promotions. Shapes are static in `plan`."""
+    """Execute a migration batch. Shapes are static in `plan`.
+
+    All source pages are gathered from the INPUT pools before any
+    scatter runs, so a swap — a demotion whose destination is the host
+    slot being vacated by a promotion (``dem_dst == pro_src``) — reads
+    the promoted page before the victim overwrites its slot. Owner
+    clears likewise land before owner sets, so the swapped slots end up
+    owned by the arriving page, not marked free.
+    """
     k_hbm, v_hbm = cache.k_hbm, cache.v_hbm
     k_host, v_host = cache.k_host, cache.v_host
     page_table = cache.page_table
@@ -85,44 +100,49 @@ def apply_migrations(cache: PagedKVCache,
     host_pages = k_host.shape[2]
     max_pages = page_table.shape[2]
 
-    # ---- demote: HBM slot src -> host slot dst -----------------------------
-    ok = plan.dem_layer >= 0
-    l = _oob(plan.dem_layer, ok, L)
-    b = jnp.maximum(plan.dem_batch, 0)
-    src = jnp.minimum(jnp.maximum(plan.dem_src, 0), hbm_pages - 1)
-    dst = _oob(plan.dem_dst, ok, host_pages)
-    logical = _oob(plan.dem_logical, ok, max_pages)
+    # ---- index prep --------------------------------------------------------
+    d_ok = plan.dem_layer >= 0
+    d_l = _oob(plan.dem_layer, d_ok, L)
+    d_b = jnp.maximum(plan.dem_batch, 0)
+    d_src = jnp.minimum(jnp.maximum(plan.dem_src, 0), hbm_pages - 1)
+    d_dst = _oob(plan.dem_dst, d_ok, host_pages)
+    d_logical = _oob(plan.dem_logical, d_ok, max_pages)
 
-    l_read = jnp.minimum(l, L - 1)
-    page_k = k_hbm[l_read, b, src]                # [M, T, KH, HD]
-    page_v = v_hbm[l_read, b, src]
-    k_host = k_host.at[l, b, dst].set(page_k, mode="drop")
-    v_host = v_host.at[l, b, dst].set(page_v, mode="drop")
-    host_owner = host_owner.at[l, b, dst].set(
-        jnp.where(ok, logical, NO_SLOT), mode="drop")
-    hbm_owner = hbm_owner.at[l, b, _oob(plan.dem_src, ok, hbm_pages)].set(
-        jnp.full_like(src, NO_SLOT), mode="drop")
-    page_table = page_table.at[l, b, logical].set(
-        dst + hbm_pages, mode="drop")
+    p_ok = plan.pro_layer >= 0
+    p_l = _oob(plan.pro_layer, p_ok, L)
+    p_b = jnp.maximum(plan.pro_batch, 0)
+    p_src = jnp.minimum(jnp.maximum(plan.pro_src, 0), host_pages - 1)
+    p_dst = _oob(plan.pro_dst, p_ok, hbm_pages)
+    p_logical = _oob(plan.pro_logical, p_ok, max_pages)
 
-    # ---- promote: host slot src -> hbm slot dst ----------------------------
-    ok = plan.pro_layer >= 0
-    l = _oob(plan.pro_layer, ok, L)
-    b = jnp.maximum(plan.pro_batch, 0)
-    src = jnp.minimum(jnp.maximum(plan.pro_src, 0), host_pages - 1)
-    dst = _oob(plan.pro_dst, ok, hbm_pages)
-    logical = _oob(plan.pro_logical, ok, max_pages)
+    # ---- gather every source page from the input pools ---------------------
+    d_lr = jnp.minimum(d_l, L - 1)
+    dem_k = k_hbm[d_lr, d_b, d_src]               # [M, T, KH, HD]
+    dem_v = v_hbm[d_lr, d_b, d_src]
+    p_lr = jnp.minimum(p_l, L - 1)
+    pro_k = k_host[p_lr, p_b, p_src]
+    pro_v = v_host[p_lr, p_b, p_src]
 
-    l_read = jnp.minimum(l, L - 1)
-    page_k = k_host[l_read, b, src]
-    page_v = v_host[l_read, b, src]
-    k_hbm = k_hbm.at[l, b, dst].set(page_k, mode="drop")
-    v_hbm = v_hbm.at[l, b, dst].set(page_v, mode="drop")
-    hbm_owner = hbm_owner.at[l, b, dst].set(
-        jnp.where(ok, logical, NO_SLOT), mode="drop")
-    host_owner = host_owner.at[l, b, _oob(plan.pro_src, ok, host_pages)] \
-        .set(jnp.full_like(src, NO_SLOT), mode="drop")
-    page_table = page_table.at[l, b, logical].set(dst, mode="drop")
+    # ---- scatter data ------------------------------------------------------
+    k_host = k_host.at[d_l, d_b, d_dst].set(dem_k, mode="drop")
+    v_host = v_host.at[d_l, d_b, d_dst].set(dem_v, mode="drop")
+    k_hbm = k_hbm.at[p_l, p_b, p_dst].set(pro_k, mode="drop")
+    v_hbm = v_hbm.at[p_l, p_b, p_dst].set(pro_v, mode="drop")
+
+    # ---- owner maps: clear vacated slots FIRST, then record arrivals -------
+    hbm_owner = hbm_owner.at[d_l, d_b, _oob(plan.dem_src, d_ok, hbm_pages)] \
+        .set(jnp.full_like(d_src, NO_SLOT), mode="drop")
+    hbm_owner = hbm_owner.at[p_l, p_b, p_dst].set(
+        jnp.where(p_ok, p_logical, NO_SLOT), mode="drop")
+    host_owner = host_owner.at[p_l, p_b, _oob(plan.pro_src, p_ok, host_pages)] \
+        .set(jnp.full_like(p_src, NO_SLOT), mode="drop")
+    host_owner = host_owner.at[d_l, d_b, d_dst].set(
+        jnp.where(d_ok, d_logical, NO_SLOT), mode="drop")
+
+    # ---- page table --------------------------------------------------------
+    page_table = page_table.at[d_l, d_b, d_logical].set(
+        d_dst + hbm_pages, mode="drop")
+    page_table = page_table.at[p_l, p_b, p_logical].set(p_dst, mode="drop")
 
     return dataclasses.replace(
         cache, k_hbm=k_hbm, v_hbm=v_hbm, k_host=k_host, v_host=v_host,

@@ -405,14 +405,20 @@ class Model:
     def decode_step(self, params, state, token, *,
                     write_slot: Optional[jax.Array] = None,
                     extra: Optional[Dict] = None,
-                    use_pallas: Optional[bool] = None):
+                    use_pallas: Optional[bool] = None,
+                    logical_page_mask: Optional[jax.Array] = None):
         cfg = self.cfg
         fam = cfg.family
+        if logical_page_mask is not None and fam not in ("dense", "vlm"):
+            raise ValueError(
+                f"logical_page_mask is only supported for dense/vlm, "
+                f"not {fam}")
         if fam in ("dense", "vlm"):
             if write_slot is None:
                 write_slot = default_write_slot(state)
             return tfm.dense_decode_step(params, cfg, state, token,
-                                         write_slot, use_pallas=use_pallas)
+                                         write_slot, use_pallas=use_pallas,
+                                         logical_page_mask=logical_page_mask)
         if fam == "moe":
             return self._moe_decode_step(params, state, token, write_slot,
                                          use_pallas)

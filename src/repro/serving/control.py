@@ -1,0 +1,157 @@
+"""Device-side (jit-safe) decode control plane.
+
+The paper's premise is that placement decisions happen at token
+cadence, so the control plane must be cheap relative to the data plane.
+Everything here is statically-shaped JAX vectorized over [L, B] — no
+Python loops, no host round-trips — so the whole decode step (write-slot
+selection, Quest-style top-k page masking, importance-EMA migration
+planning) fuses into one jitted program and can run under `lax.scan`
+(see `ServingEngine.run` / `.generate` and EXPERIMENTS.md §Fused-engine).
+
+Semantics match the original host-side planner exactly:
+
+  * write slot: the token's logical page keeps its existing mapping;
+    a fresh page takes the first free HBM slot, else the first free
+    host slot, else the last host slot.
+  * quest mask: keep the top-k pages by importance EMA (k from the
+    sparsity target), always keeping the sink page and the two most
+    recent pages.
+  * migrations: per (layer, batch), promote the `budget` hottest host
+    pages above `promote_thresh`; free HBM slots are consumed first
+    (in slot order), then the coldest HBM residents are swapped out —
+    the i-th hottest candidate displaces the i-th coldest victim only
+    if strictly hotter, which reproduces the sequential early-break of
+    the loop form (candidate importance is non-increasing in i while
+    victim importance is non-decreasing).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.migrate import MigrationPlan
+from repro.kvcache.paged import PagedKVCache
+
+
+def choose_write_slot(cache: PagedKVCache) -> jax.Array:
+    """Physical slot [L, B] receiving this step's token."""
+    T = cache.k_hbm.shape[3]
+    hbm_pages = cache.k_hbm.shape[2]
+    host_pages = cache.k_host.shape[2]
+    max_pages = cache.page_table.shape[2]
+    B = cache.length.shape[0]
+
+    logical = jnp.minimum(cache.length // T, max_pages - 1)        # [B]
+    existing = cache.page_table[:, jnp.arange(B), logical]         # [L, B]
+
+    free_h = cache.hbm_owner < 0                                   # [L,B,Ph]
+    has_h = jnp.any(free_h, axis=-1)
+    first_h = jnp.argmax(free_h, axis=-1).astype(jnp.int32)
+    free_e = cache.host_owner < 0
+    has_e = jnp.any(free_e, axis=-1)
+    first_e = jnp.argmax(free_e, axis=-1).astype(jnp.int32)
+
+    spill = hbm_pages + jnp.where(has_e, first_e, host_pages - 1)
+    fresh = jnp.where(has_h, first_h, spill)
+    return jnp.where(existing >= 0, existing, fresh).astype(jnp.int32)
+
+
+def quest_page_mask(cache: PagedKVCache, sparsity: float) -> jax.Array:
+    """Quest-style top-k page mask, bool [L, B, max_pages].
+
+    Keeps ceil-rounded (1 - sparsity) * n_alive pages per (layer, batch)
+    ranked by importance EMA (at least 1), plus the sink page (logical
+    0) and the two most recently born pages.
+    """
+    alive = cache.page_table >= 0                                  # [L,B,P]
+    n_alive = alive.sum(axis=-1)                                   # [L,B]
+    k = jnp.maximum(1, jnp.round((1.0 - sparsity)
+                                 * n_alive).astype(jnp.int32))
+    imp = jnp.where(alive, cache.importance, -jnp.inf)
+    order = jnp.argsort(-imp, axis=-1)          # stable desc; dead last
+    rank = jnp.argsort(order, axis=-1)          # rank of each page
+    topk = rank < k[..., None]
+    idx = jnp.arange(alive.shape[-1])[None, None, :]
+    sink = idx == 0
+    recent = idx >= (n_alive[..., None] - 2)
+    return alive & (topk | sink | recent)
+
+
+def migration_budget(geo, frac: float) -> int:
+    """Per-(layer, batch) promote budget — a static Python int, so plan
+    capacity (and therefore `apply_migrations`'s traced shapes) depend
+    only on the cache geometry, never on step-time page counts."""
+    return min(max(1, int(frac * geo.hbm_pages)),
+               geo.hbm_pages, geo.host_pages)
+
+
+def plan_capacity(geo, frac: float) -> int:
+    """Fixed MigrationPlan capacity for a geometry: every (layer, batch)
+    pair may promote (and thus demote) at most `migration_budget` pages."""
+    return geo.num_layers * geo.batch * migration_budget(geo, frac)
+
+
+def plan_migrations(cache: PagedKVCache, *, budget: int,
+                    promote_thresh: float
+                    ) -> Tuple[MigrationPlan, jax.Array, jax.Array]:
+    """Importance-EMA hysteresis planner, vectorized over [L, B].
+
+    Returns (plan, n_promotes, n_demotes); the plan's capacity is
+    L * B * budget regardless of how many rows are live, so
+    `apply_migrations` compiles exactly once per geometry.
+    """
+    imp = cache.importance                                         # [L,B,P]
+    ho, eo = cache.hbm_owner, cache.host_owner
+    L, B, Ph = ho.shape
+    Pe = eo.shape[2]
+    assert 1 <= budget <= min(Ph, Pe), (budget, Ph, Pe)
+    neg_inf = jnp.float32(-jnp.inf)
+
+    # hottest `budget` host-resident pages
+    host_occ = eo >= 0
+    host_imp = jnp.where(
+        host_occ, jnp.take_along_axis(imp, jnp.maximum(eo, 0), axis=-1),
+        neg_inf)
+    cand_imp, cand_slot = jax.lax.top_k(host_imp, budget)          # [L,B,M]
+    cand_logical = jnp.take_along_axis(eo, cand_slot, axis=-1)
+
+    # destination ranking: free HBM slots (importance -inf) first, then
+    # coldest residents — ascending stable sort does both at once
+    hbm_occ = ho >= 0
+    hbm_imp = jnp.where(
+        hbm_occ, jnp.take_along_axis(imp, jnp.maximum(ho, 0), axis=-1),
+        neg_inf)
+    dst_slot = jnp.argsort(hbm_imp, axis=-1)[..., :budget].astype(jnp.int32)
+    victim_imp = jnp.take_along_axis(hbm_imp, dst_slot, axis=-1)
+    victim_logical = jnp.take_along_axis(ho, dst_slot, axis=-1)
+
+    promote = (cand_imp > promote_thresh) & (victim_imp < cand_imp)
+    demote = promote & (victim_logical >= 0)   # dst was occupied: swap out
+
+    lidx = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[:, None, None],
+                            promote.shape)
+    bidx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :, None],
+                            promote.shape)
+
+    def rows(ok, *cols):
+        return [jnp.where(ok, c, -1).reshape(-1).astype(jnp.int32)
+                for c in cols]
+
+    plan = MigrationPlan(
+        # promote: host slot cand_slot -> hbm slot dst_slot
+        *rows(promote, lidx, bidx, cand_slot, dst_slot, cand_logical),
+        # demote: hbm slot dst_slot -> the host slot vacated by the
+        # promotion (cand_slot), carrying the victim's logical page
+        *rows(demote, lidx, bidx, dst_slot, cand_slot, victim_logical),
+    )
+    return plan, promote.sum(), demote.sum()
+
+
+def occupancy(cache: PagedKVCache) -> jax.Array:
+    """[2] int32: resident page counts (HBM, host) summed over [L, B] —
+    the per-step read traffic in pages for Eq. (3)/(4) telemetry."""
+    return jnp.stack([(cache.hbm_owner >= 0).sum(),
+                      (cache.host_owner >= 0).sum()]).astype(jnp.int32)

@@ -1,27 +1,40 @@
 """Serving engine: the paper's dynamic KV placement as a live feature.
 
-Per decode step:
-  1. (data plane, jit) `decode_step` over the two-tier paged cache with
-     optional Quest-style page bypassing; emits per-page attention-mass
-     importance stats for free (fused in the attention kernel).
-  2. (control plane, host) the placement policy turns importance stats
-     into a bounded `MigrationPlan` (promote hot host pages / demote
-     cold HBM pages) — no foresight, exactly the runtime-policy regime
-     the paper's SA bound upper-bounds.
-  3. (data plane, jit) `apply_migrations` swaps pages between pools.
-  4. telemetry: every byte the step moved is priced with the paper's
-     Eq.(1)-(5) under a `MemorySystemSpec`, so real runs and the
-     simulator are directly comparable (EXPERIMENTS.md §Repro-live).
+The entire decode step runs as ONE jitted, statically-shaped program on
+device (see `repro.serving.control` and EXPERIMENTS.md §Fused-engine):
 
-Engine policies: "static" (never migrate), "importance" (cost-aware
+  1. control plane (jit): write-slot selection, Quest-style top-k page
+     masking, and the importance-EMA migration planner, vectorized over
+     [L, B] — no Python loops, no host round-trips.
+  2. data plane (jit): `decode_step` over the two-tier paged cache;
+     per-page attention-mass importance stats fall out of the attention
+     kernel for free.
+  3. data plane (jit): `apply_migrations` executes a FIXED-capacity
+     `MigrationPlan` (capacity depends only on geometry and
+     `migration_budget_frac`), so it compiles exactly once.
+  4. telemetry: the step emits a tiny [4] int32 vector (resident HBM /
+     host pages, promotes, demotes); the host prices it with the
+     paper's Eq.(1)-(5) under a `MemorySystemSpec`.
+
+Two drive modes share the identical step function, so their logits are
+bitwise identical and their byte accounting matches exactly:
+
+  eager  `step(token)`         — one jitted call + host readback per
+                                 token (the debugging / reference path)
+  fused  `run(tokens)` /       — `lax.scan` over chunks of
+         `generate(token, n)`    `telemetry_stride` steps with the
+                                 cache donated; the host reads back one
+                                 [stride, 4] stats array per chunk.
+
+Engine policies: "static" (never migrate) and "importance" (cost-aware
 hysteresis on the attention-mass EMA — our deployable beyond-paper
-policy), "lru" (promote-most-recent analog using recency of mass).
+policy).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +42,10 @@ import numpy as np
 
 from repro.core.latency_model import StepTraffic, step_latency
 from repro.core.tiers import MemorySystemSpec, TPU_V5E
-from repro.kvcache.migrate import MigrationPlan, apply_migrations
-from repro.kvcache.paged import CacheGeometry, PagedKVCache
-from repro.models.model import Model, default_write_slot
+from repro.kvcache.migrate import apply_migrations
+from repro.kvcache.paged import PagedKVCache
+from repro.models.model import Model
+from repro.serving import control
 
 
 @dataclasses.dataclass
@@ -45,6 +59,9 @@ class EngineConfig:
     migration_budget_frac: float = 0.1
     promote_thresh: float = 0.02     # attention-mass EMA threshold
     spec: MemorySystemSpec = TPU_V5E
+    #: fused-mode scan length: decode steps run on device between
+    #: telemetry readbacks (1 = eager cadence, larger = fewer syncs)
+    telemetry_stride: int = 32
 
 
 @dataclasses.dataclass
@@ -55,6 +72,16 @@ class StepStats:
     m_in: float
     m_out: float
     hbm_hit_rate: float
+
+
+def _get_cache(state) -> PagedKVCache:
+    return state if isinstance(state, PagedKVCache) else state["kv"]
+
+
+def _set_cache(state, cache):
+    if isinstance(state, PagedKVCache):
+        return cache
+    return {**state, "kv": cache}
 
 
 class ServingEngine:
@@ -73,167 +100,137 @@ class ServingEngine:
         logits, state = self.model.prefill(self.params, prompts, geo,
                                            extra=extra)
         self.state = state
+        self._build_step_fns()
         return logits
 
     @property
     def _cache(self) -> PagedKVCache:
-        st = self.state
-        return st if isinstance(st, PagedKVCache) else st["kv"]
+        return _get_cache(self.state)
 
-    def _set_cache(self, cache):
-        if isinstance(self.state, PagedKVCache):
-            self.state = cache
-        else:
-            self.state = {**self.state, "kv": cache}
+    # ------------------------------------------------------------------ #
+    # the fused step: control plane + data plane + migration, all jit
+    # ------------------------------------------------------------------ #
+    def _build_step_fns(self):
+        cfg, model, geo = self.cfg, self.model, self.geo
+        sparsity = cfg.attention_sparsity
+        masked = sparsity > 0 and model.cfg.family in ("dense", "vlm")
+        migrate = cfg.policy != "static"
+        budget = control.migration_budget(geo, cfg.migration_budget_frac)
+        thresh = cfg.promote_thresh
 
+        def step_fn(params, state, token):
+            cache = _get_cache(state)
+            kwargs = {"write_slot": control.choose_write_slot(cache)}
+            if masked:
+                kwargs["logical_page_mask"] = control.quest_page_mask(
+                    cache, sparsity)
+            logits, state = model.decode_step(params, state, token,
+                                              **kwargs)
+            cache = _get_cache(state)
+            # read traffic is counted on post-decode, pre-migration
+            # residency (the step's attention read the old placement)
+            occ = control.occupancy(cache)
+            if migrate:
+                plan, n_pro, n_dem = control.plan_migrations(
+                    cache, budget=budget, promote_thresh=thresh)
+                state = _set_cache(state, apply_migrations(cache, plan))
+                moves = jnp.stack([n_pro, n_dem]).astype(jnp.int32)
+            else:
+                moves = jnp.zeros((2,), jnp.int32)
+            return logits, state, jnp.concatenate([occ, moves])
+
+        def chunk_fn(params, state, tokens):
+            """Teacher-forced fused decode over tokens [n, B]."""
+            def body(st, tok):
+                logits, st, stats = step_fn(params, st, tok)
+                return st, (logits, stats)
+            state, (logits, stats) = jax.lax.scan(body, state, tokens)
+            return state, logits, stats
+
+        def gen_fn(params, state, token, n):
+            """Greedy self-feeding fused decode for n steps."""
+            def body(carry, _):
+                st, tok = carry
+                logits, st, stats = step_fn(params, st, tok)
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                return (st, nxt), (nxt, stats)
+            (state, token), (toks, stats) = jax.lax.scan(
+                body, (state, token), None, length=n)
+            return state, token, toks, stats
+
+        self._step_jit = jax.jit(step_fn, donate_argnums=(1,))
+        self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1,))
+        self._gen_jit = jax.jit(gen_fn, donate_argnums=(1,),
+                                static_argnums=(3,))
+
+    # ------------------------------------------------------------------ #
+    # drive modes
     # ------------------------------------------------------------------ #
     def step(self, token: jax.Array) -> jax.Array:
-        cache = self._cache
-        write_slot, mask = self._control_plane(cache)
-        kwargs = {}
-        if mask is not None and self.model.cfg.family in ("dense", "vlm"):
-            from repro.models import transformer as tfm
-            logits, cache_new = tfm.dense_decode_step(
-                self.params, self.model.cfg, cache, token, write_slot,
-                logical_page_mask=jnp.asarray(mask))
-            self._set_cache(cache_new)
-        else:
-            logits, state = self.model.decode_step(
-                self.params, self.state, token, write_slot=write_slot)
-            self.state = state
-            cache_new = self._cache
-
-        plan, traffic = self._plan_migrations(cache_new)
-        if plan is not None:
-            self._set_cache(apply_migrations(self._cache, plan))
-        self._record(traffic, mask)
+        """Eager: one device dispatch + one telemetry sync per token."""
+        logits, self.state, stats = self._step_jit(
+            self.params, self.state, token)
+        self._record(np.asarray(stats)[None])
         return logits
 
-    # ------------------------------------------------------------------ #
-    # control plane
-    # ------------------------------------------------------------------ #
-    def _control_plane(self, cache: PagedKVCache):
-        """Choose the write slot for this token + the attention mask."""
-        geo = self.geo
-        length = int(np.asarray(cache.length)[0])
-        T = geo.page_tokens
-        logical = min(length // T, geo.max_pages - 1)
-        pt = np.asarray(cache.page_table)          # [L,B,maxP]
-        L, B = pt.shape[0], pt.shape[1]
+    def run(self, tokens: jax.Array) -> jax.Array:
+        """Fused teacher-forced decode. tokens [K, B] -> logits [K, B, V].
 
-        # write slot: existing mapping, else first free HBM slot, else
-        # first free host slot (policy "static" semantics for new pages)
-        ho = np.asarray(cache.hbm_owner)
-        eo = np.asarray(cache.host_owner)
-        ws = np.zeros((L, B), np.int32)
-        for l in range(L):
-            for b in range(B):
-                if pt[l, b, logical] >= 0:
-                    ws[l, b] = pt[l, b, logical]
-                else:
-                    free_h = np.nonzero(ho[l, b] < 0)[0]
-                    if len(free_h):
-                        ws[l, b] = free_h[0]
-                    else:
-                        free_e = np.nonzero(eo[l, b] < 0)[0]
-                        ws[l, b] = geo.hbm_pages + (free_e[0] if len(free_e)
-                                                    else geo.host_pages - 1)
+        Runs `lax.scan` chunks of `telemetry_stride` steps; telemetry is
+        read back once per chunk. Produces bitwise-identical logits and
+        identical StepStats accounting to K calls of `step()`.
+        """
+        K = tokens.shape[0]
+        if K == 0:
+            return jnp.zeros((0, tokens.shape[1], self.model.cfg.vocab))
+        stride = max(1, self.cfg.telemetry_stride)
+        out = []
+        for s in range(0, K, stride):
+            self.state, logits, stats = self._chunk_jit(
+                self.params, self.state, tokens[s:s + stride])
+            self._record(np.asarray(stats))
+            out.append(logits)
+        return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)
 
-        mask = None
-        sp = self.cfg.attention_sparsity
-        if sp > 0:
-            imp = np.asarray(cache.importance)     # [L,B,maxP]
-            alive = pt >= 0
-            mask = np.zeros_like(alive)
-            n_alive = alive.sum(-1)                # [L,B]
-            for l in range(L):
-                for b in range(B):
-                    k = max(1, int(round((1 - sp) * n_alive[l, b])))
-                    cand = np.nonzero(alive[l, b])[0]
-                    top = cand[np.argsort(-imp[l, b, cand], kind="stable")][:k]
-                    mask[l, b, top] = True
-                    mask[l, b, cand[:1]] = True          # sink page
-                    mask[l, b, cand[-2:]] = True         # recency pages
-        return jnp.asarray(ws), mask
-
-    def _plan_migrations(self, cache: PagedKVCache):
-        if self.cfg.policy == "static":
-            return None, self._traffic(cache, 0, 0)
-        imp = np.asarray(cache.importance)
-        ho = np.asarray(cache.hbm_owner)
-        eo = np.asarray(cache.host_owner)
-        L, B = ho.shape[0], ho.shape[1]
-        budget = max(1, int(self.cfg.migration_budget_frac
-                            * self.geo.hbm_pages))
-        promotes, demotes = [], []
-        for l in range(L):
-            for b in range(B):
-                host_pages = np.nonzero(eo[l, b] >= 0)[0]
-                if not len(host_pages):
-                    continue
-                host_logical = eo[l, b, host_pages]
-                host_imp = imp[l, b, host_logical]
-                order = np.argsort(-host_imp, kind="stable")
-                hot = [(host_pages[i], host_logical[i], host_imp[i])
-                       for i in order[:budget]
-                       if host_imp[i] > self.cfg.promote_thresh]
-                if not hot:
-                    continue
-                hbm_pages = np.nonzero(ho[l, b] >= 0)[0]
-                hbm_logical = ho[l, b, hbm_pages]
-                hbm_imp = imp[l, b, hbm_logical]
-                cold_order = np.argsort(hbm_imp, kind="stable")
-                free = np.nonzero(ho[l, b] < 0)[0].tolist()
-                ci = 0
-                for src, logical, h_imp in hot:
-                    if free:
-                        dst = free.pop(0)
-                    elif ci < len(cold_order):
-                        # swap: demote the coldest resident first
-                        victim = cold_order[ci]
-                        if hbm_imp[victim] >= h_imp:
-                            break   # nothing colder than the candidate
-                        vslot = hbm_pages[victim]
-                        # host slot freed by this promotion
-                        demotes.append((l, b, vslot, src,
-                                        hbm_logical[victim]))
-                        dst = vslot
-                        ci += 1
-                    else:
-                        break
-                    promotes.append((l, b, src, dst, logical))
-        if not promotes and not demotes:
-            return None, self._traffic(cache, 0, 0)
-        cap = max(len(promotes), len(demotes), 1)
-        plan = MigrationPlan.build(cap, promotes, demotes)
-        return plan, self._traffic(cache, len(promotes), len(demotes))
+    def generate(self, token: jax.Array, steps: int) -> jax.Array:
+        """Fused greedy generation from `token` [B] -> tokens [steps, B]."""
+        if steps == 0:
+            return jnp.zeros((0,) + token.shape, jnp.int32)
+        stride = max(1, self.cfg.telemetry_stride)
+        out = []
+        done = 0
+        while done < steps:
+            n = min(stride, steps - done)
+            self.state, token, toks, stats = self._gen_jit(
+                self.params, self.state, token, n)
+            self._record(np.asarray(stats))
+            out.append(toks)
+            done += n
+        return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)
 
     # ------------------------------------------------------------------ #
-    def _traffic(self, cache, n_pro, n_dem):
+    # telemetry (host side, Eq. (1)-(5) pricing)
+    # ------------------------------------------------------------------ #
+    def _record(self, stats: np.ndarray):
+        """stats: [n, 4] int32 rows of (hbm_pages, host_pages, promotes,
+        demotes) straight off the device."""
         geo = self.geo
         pb = geo.page_bytes()
-        ho = np.asarray(cache.hbm_owner) >= 0
-        eo = np.asarray(cache.host_owner) >= 0
-        # dense attention reads every resident page; sparse reads are
-        # rescaled by (1 - sparsity)
         frac = 1.0 - self.cfg.attention_sparsity
-        h_read = float(ho.sum()) * pb * frac
-        e_read = float(eo.sum()) * pb * frac
-        return dict(h_read=h_read, e_read=e_read,
-                    m_in=n_pro * pb, m_out=n_dem * pb,
-                    h_write=pb / geo.page_tokens, e_write=0.0)
+        for h_pages, e_pages, n_pro, n_dem in stats:
+            traffic = dict(
+                h_read=float(h_pages) * pb * frac,
+                e_read=float(e_pages) * pb * frac,
+                m_in=float(n_pro) * pb, m_out=float(n_dem) * pb,
+                h_write=pb / geo.page_tokens, e_write=0.0)
+            lat = float(step_latency(StepTraffic(**traffic), self.cfg.spec))
+            denom = traffic["h_read"] + traffic["e_read"]
+            self.stats.append(StepStats(
+                modeled_latency_s=lat,
+                h_read=traffic["h_read"], e_read=traffic["e_read"],
+                m_in=traffic["m_in"], m_out=traffic["m_out"],
+                hbm_hit_rate=traffic["h_read"] / denom if denom else 1.0))
 
-    def _record(self, traffic, mask):
-        t = StepTraffic(**traffic)
-        lat = float(step_latency(t, self.cfg.spec))
-        denom = traffic["h_read"] + traffic["e_read"]
-        self.stats.append(StepStats(
-            modeled_latency_s=lat,
-            h_read=traffic["h_read"], e_read=traffic["e_read"],
-            m_in=traffic["m_in"], m_out=traffic["m_out"],
-            hbm_hit_rate=traffic["h_read"] / denom if denom else 1.0))
-
-    # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, float]:
         if not self.stats:
             return {}

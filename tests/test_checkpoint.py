@@ -47,14 +47,24 @@ class TestRoundtrip:
         t = _tree()
         d = str(tmp_path / "ck")
         save_pytree(t, d)
-        # flip bytes in a chunk file
-        victim = [f for f in os.listdir(d) if f.endswith(".zst")][0]
+        # flip bytes in a chunk file (extension depends on the codec)
+        victim = [f for f in os.listdir(d)
+                  if f.endswith((".zstd", ".zlib", ".zst"))][0]
         path = os.path.join(d, victim)
         blob = bytearray(open(path, "rb").read())
         blob[10] ^= 0xFF
         open(path, "wb").write(bytes(blob))
         with pytest.raises(AssertionError, match="corrupt"):
             restore_pytree(t, d)
+
+    def test_zlib_codec_roundtrip(self, tmp_path):
+        """The stdlib fallback codec must roundtrip without zstandard."""
+        t = _tree()
+        d = str(tmp_path / "ck")
+        save_pytree(t, d, codec="zlib")
+        assert any(f.endswith(".zlib") for f in os.listdir(d))
+        r = restore_pytree(t, d)
+        _assert_tree_equal(t, r)
 
 
 class TestCommitProtocol:

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kvcache.migrate import MigrationPlan, apply_migrations
 from repro.kvcache.paged import (
@@ -99,6 +99,39 @@ class TestMigration:
                                       np.asarray(cache2.page_table))
         np.testing.assert_array_equal(np.asarray(cache.k_hbm),
                                       np.asarray(cache2.k_hbm))
+
+    def test_swap_same_slot_preserves_both_pages(self):
+        """A promote whose vacated host slot receives the demoted victim
+        (dem_dst == pro_src, pro_dst == dem_src) must preserve BOTH
+        pages — regression for the demote-first ordering that clobbered
+        the promoted page before it was read."""
+        geo = _geo(hbm=2, host=4)
+        cache, k, _ = _filled_cache(geo, tokens=12)   # pages 0,1 hbm; 2 host
+        plan = MigrationPlan.build(
+            2,
+            [(0, 0, 0, 0, 2)],    # promote page 2: host slot 0 -> hbm slot 0
+            [(0, 0, 0, 0, 0)])    # demote page 0: hbm slot 0 -> host slot 0
+        cache = apply_migrations(cache, plan)
+        pt = np.asarray(cache.page_table)
+        assert pt[0, 0, 2] == 0                      # promoted into hbm
+        assert pt[0, 0, 0] == geo.hbm_pages          # demoted into host 0
+        ho = np.asarray(cache.hbm_owner)
+        eo = np.asarray(cache.host_owner)
+        assert ho[0, 0, 0] == 2 and eo[0, 0, 0] == 0
+        for t in range(12):
+            np.testing.assert_array_equal(read_token(cache, geo, 0, 0, t),
+                                          np.asarray(k[0, 0, t]))
+
+    def test_apply_migrations_not_retraced_across_counts(self):
+        """Fixed-capacity plans: varying live promote/demote counts must
+        reuse one executable (no per-step recompiles)."""
+        geo = _geo(hbm=2, host=4)
+        cache, _, _ = _filled_cache(geo, tokens=12)
+        apply_jit = jax.jit(apply_migrations)
+        demotes = [(0, 0, 0, 1, 0), (1, 0, 0, 1, 0), (0, 1, 0, 1, 0)]
+        for n in (0, 1, 2, 3):
+            apply_jit(cache, MigrationPlan.build(4, [], demotes[:n]))
+        assert apply_jit._cache_size() == 1
 
     @given(st.integers(0, 10_000))
     @settings(max_examples=20, deadline=None)

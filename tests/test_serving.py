@@ -1,5 +1,7 @@
 """Serving engine + continuous batcher behaviour."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -65,6 +67,113 @@ class TestEngine:
         L, B = eng.geo.num_layers, eng.geo.batch
         for s in eng.stats:
             assert s.m_in <= budget_pages * pb * L * B
+
+
+class TestFusedParity:
+    """`run`/`generate` (lax.scan fused) vs `step` (eager): identical
+    program, so logits must be bitwise equal and StepStats identical."""
+
+    def _engine(self, model, params, policy, sparsity, stride):
+        eng = ServingEngine(model, params, EngineConfig(
+            max_context=128, hbm_fraction=0.25, policy=policy,
+            attention_sparsity=sparsity, spec=GH200,
+            promote_thresh=0.005, telemetry_stride=stride))
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(
+            rng.integers(0, model.cfg.vocab, (2, 32)), jnp.int32)
+        eng.start(prompts)
+        return eng
+
+    @pytest.mark.parametrize("policy,sparsity", [
+        ("static", 0.0), ("importance", 0.0), ("importance", 0.5)])
+    def test_run_matches_eager_steps(self, dense_model, policy, sparsity):
+        model, params = dense_model
+        k = 7
+        rng = np.random.default_rng(3)
+        tokens = jnp.asarray(
+            rng.integers(0, model.cfg.vocab, (k, 2)), jnp.int32)
+
+        eager = self._engine(model, params, policy, sparsity, stride=32)
+        eager_logits = np.stack(
+            [np.asarray(eager.step(tokens[i])) for i in range(k)])
+        # stride 3 also exercises the ragged final chunk (3 + 3 + 1)
+        for stride in (32, 3):
+            fused = self._engine(model, params, policy, sparsity, stride)
+            fused_logits = np.asarray(fused.run(tokens))
+            np.testing.assert_array_equal(fused_logits, eager_logits)
+            assert fused.stats == eager.stats
+
+    def test_generate_matches_eager_greedy(self, dense_model):
+        model, params = dense_model
+        eager = self._engine(model, params, "importance", 0.4, stride=32)
+        tok = jnp.array([1, 2], jnp.int32)
+        want = []
+        for _ in range(6):
+            tok = jnp.argmax(eager.step(tok), -1).astype(jnp.int32)
+            want.append(np.asarray(tok))
+        fused = self._engine(model, params, "importance", 0.4, stride=4)
+        got = np.asarray(fused.generate(jnp.array([1, 2], jnp.int32), 6))
+        np.testing.assert_array_equal(got, np.stack(want))
+        assert fused.stats == eager.stats
+
+    def test_step_compiles_once_with_live_migrations(self, dense_model):
+        """The fused step (control plane + decode + migration) must not
+        retrace as promote/demote counts vary across steps. The prompt
+        spills past the HBM pool so promotions actually fire."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, EngineConfig(
+            max_context=512, hbm_fraction=0.25, policy="importance",
+            attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4))
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(
+            rng.integers(0, model.cfg.vocab, (1, 272)), jnp.int32)
+        eng.start(prompts)
+        assert int(np.asarray(
+            (eng._cache.host_owner >= 0).sum())) > 0   # host tier in use
+        tok = jnp.array([1], jnp.int32)
+        for _ in range(8):
+            tok = jnp.argmax(eng.step(tok), -1).astype(jnp.int32)
+        assert eng._step_jit._cache_size() == 1
+        assert sum(s.m_in + s.m_out for s in eng.stats) > 0
+
+
+class TestDevicePlanner:
+    def test_promotes_hottest_host_page_into_coldest_slot(self):
+        from repro.kvcache.paged import CacheGeometry, prefill_cache
+        from repro.serving import control
+
+        geo = CacheGeometry(num_layers=1, batch=1, page_tokens=4,
+                            hbm_pages=2, host_pages=4, kv_heads=2,
+                            head_dim=8, dtype=jnp.float32)
+        rng = np.random.default_rng(0)
+        kv = jnp.asarray(rng.standard_normal((1, 1, 16, 2, 8)), jnp.float32)
+        cache = prefill_cache(geo, kv, kv, 16)   # pages 0,1 hbm; 2,3 host
+        # page 3 (host slot 1) is hot; page 0 (hbm slot 0) is coldest
+        importance = jnp.asarray([[[0.01, 0.3, 0.02, 0.9]]], jnp.float32)
+        cache = dataclasses.replace(cache, importance=importance)
+        plan, n_pro, n_dem = control.plan_migrations(
+            cache, budget=1, promote_thresh=0.05)
+        assert int(n_pro) == 1 and int(n_dem) == 1
+        assert int(plan.pro_src[0]) == 1      # host slot of page 3
+        assert int(plan.pro_dst[0]) == 0      # coldest hbm slot
+        assert int(plan.pro_logical[0]) == 3
+        assert int(plan.dem_src[0]) == 0      # victim hbm slot
+        assert int(plan.dem_dst[0]) == 1      # vacated host slot
+        assert int(plan.dem_logical[0]) == 0
+
+    def test_no_promotion_below_threshold(self):
+        from repro.kvcache.paged import CacheGeometry, prefill_cache
+        from repro.serving import control
+
+        geo = CacheGeometry(num_layers=1, batch=1, page_tokens=4,
+                            hbm_pages=2, host_pages=4, kv_heads=2,
+                            head_dim=8, dtype=jnp.float32)
+        kv = jnp.zeros((1, 1, 16, 2, 8), jnp.float32)
+        cache = prefill_cache(geo, kv, kv, 16)
+        plan, n_pro, n_dem = control.plan_migrations(
+            cache, budget=2, promote_thresh=0.5)
+        assert int(n_pro) == 0 and int(n_dem) == 0
+        assert np.all(np.asarray(plan.pro_layer) == -1)
 
 
 class TestContinuousBatcher:
