@@ -14,9 +14,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core.experiment import Workload, run_strategy, tune_sa
+from repro.core.experiment import Workload
 from repro.core.sa import SAConfig
-from repro.core.tiers import GH200, TPU_V5E
 from repro.core.traces import synthetic_trace
 
 PROMPT = 30_000

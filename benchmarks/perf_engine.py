@@ -17,11 +17,19 @@ Three drive modes over the SAME model and two-tier paged cache:
            steps per dispatch, cache donated, one telemetry readback
            per chunk.
 
+A fourth mode measures the headline serving API:
+
+  serve  — `ServingEngine.serve`: a mixed-length request stream through
+           the same fused chunks with per-slot active masking, on-device
+           sampling, and chunk-boundary admission/reclaim.
+
 Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite). The headline
 is fused/host steps-per-second; fused executable counts are asserted to
 stay at one compile per scan length (zero migration-driven retraces).
 
 Run:  PYTHONPATH=src python benchmarks/perf_engine.py
+CI:   PYTHONPATH=src python benchmarks/perf_engine.py --ci
+      (reduced geometry; additionally asserts fused >= eager steps/s)
 """
 
 from __future__ import annotations
@@ -38,6 +46,7 @@ from repro.core.tiers import GH200
 from repro.kvcache.migrate import MigrationPlan, apply_migrations
 from repro.models.model import Model
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.scheduler import Request
 
 STEPS = 64          # multiple of STRIDE: scan lengths compile once in warmup
 STRIDE = 32
@@ -180,16 +189,42 @@ def _time_fused(eng, steps):
     return steps / (time.perf_counter() - t0)
 
 
-def run(print_csv: bool = True, steps: int = STEPS):
+def _time_serve(model, params, *, stride, max_context, n_requests=6):
+    """Mixed-length request stream through `serve`; returns (tokens/s,
+    serve-chunk executable count)."""
+    eng = ServingEngine(model, params, EngineConfig(
+        max_context=max_context, hbm_fraction=0.25, policy="importance",
+        attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4,
+        telemetry_stride=stride))
+    rng = np.random.default_rng(0)
+    def mk():
+        return [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab,
+                                            (32 + 16 * (i % 3),)),
+                        max_new_tokens=stride // 2 + 4 * (i % 3))
+                for i in range(n_requests)]
+    eng.serve(mk(), num_slots=2, seed=0)                    # compile
+    reqs = mk()
+    t0 = time.perf_counter()
+    done = eng.serve(reqs, num_slots=2, seed=1)
+    total = sum(len(r.output) for r in done)
+    return total / (time.perf_counter() - t0), \
+        eng._serve_jit._cache_size()
+
+
+def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     cfg = configs.get_smoke("internlm2-1.8b")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
+    host_steps = 2 if ci else HOST_STEPS
+    if ci:                     # reduced geometry for the CI smoke job
+        steps = min(steps, 2 * STRIDE)
 
-    result = {"steps": steps, "stride": STRIDE, "rows": {}}
+    result = {"steps": steps, "stride": STRIDE, "ci": ci, "rows": {}}
     rows = []
     for policy in ("static", "importance"):
         host_sps = _time_steps(
-            _engine(model, params, policy, HostLoopEngine), HOST_STEPS)
+            _engine(model, params, policy, HostLoopEngine), host_steps)
         eager_eng = _engine(model, params, policy)
         eager_sps = _time_steps(eager_eng, steps)
         fused_eng = _engine(model, params, policy)
@@ -200,6 +235,13 @@ def run(print_csv: bool = True, steps: int = STEPS):
             eager_eng._step_jit._cache_size()
         assert fused_eng._gen_jit._cache_size() == 1, \
             fused_eng._gen_jit._cache_size()
+        if ci:
+            # wall-clock gate with a noise margin: shared CI runners
+            # jitter single-digit percents; a real fusion regression
+            # (lost scan, per-step dispatch) costs far more than 10%
+            assert fused_sps >= 0.9 * eager_sps, \
+                (f"fused regressed below eager: "
+                 f"{fused_sps:.1f} < {eager_sps:.1f} steps/s")
         result["rows"][policy] = {
             "host_steps_per_s": host_sps,
             "eager_steps_per_s": eager_sps,
@@ -215,6 +257,16 @@ def run(print_csv: bool = True, steps: int = STEPS):
         rows.append((f"perf/{policy}/fused_vs_host", 0.0,
                      fused_sps / host_sps))
 
+    serve_tps, serve_exes = _time_serve(
+        model, params, stride=8 if ci else STRIDE,
+        max_context=128 if ci else 512, n_requests=4 if ci else 6)
+    assert serve_exes == 1, serve_exes     # zero retraces across stream
+    result["rows"]["serve"] = {
+        "tokens_per_s": serve_tps,
+        "serve_chunk_executables": serve_exes,
+    }
+    rows.append(("perf/serve/stream", 1e6 / serve_tps, serve_tps))
+
     with open("BENCH_engine.json", "w") as f:
         json.dump(result, f, indent=2)
     if print_csv:
@@ -224,4 +276,10 @@ def run(print_csv: bool = True, steps: int = STEPS):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--ci", action="store_true",
+                    help="reduced geometry + fused>=eager gate (CI smoke)")
+    args = ap.parse_args()
+    run(steps=args.steps, ci=args.ci)

@@ -4,8 +4,9 @@ paged KV cache with dynamic placement — the paper's technique live.
 Pipeline: train a small model briefly (so generations aren't pure
 noise) -> prefill a batch of prompts -> decode with (a) static
 placement and (b) importance-EMA placement + Quest-style sparsity,
-comparing modeled throughput under the Eq.(1)-(5) cost model, plus the
-continuous batcher admitting a stream of requests.
+comparing modeled throughput under the Eq.(1)-(5) cost model — then
+`ServingEngine.serve`: a mixed-length request stream continuously
+batched through the same fused decode loop with on-device sampling.
 
 Run:  PYTHONPATH=src python examples/serve_two_tier.py
 """
@@ -19,7 +20,8 @@ from repro.core.tiers import GH200
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models.model import Model
 from repro.serving.engine import EngineConfig, ServingEngine
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.sampling import SamplingConfig
+from repro.serving.scheduler import Request
 from repro.training.train_step import init_train_state, make_train_step
 
 
@@ -54,19 +56,27 @@ def main():
               f" tok/s  hit={s['mean_hbm_hit_rate']:.2f}"
               f"  migrated={s['migrated_bytes'] / 1e6:.1f}MB")
 
-    # --- continuous batching over a request stream -----------------------
-    cb = ContinuousBatcher(num_slots=4, total_pages=64)
-    for rid in range(10):
-        cb.submit(Request(rid=rid, prompt_len=48,
-                          max_new_tokens=8 + 4 * (rid % 3)))
-    steps = 0
-    while len(cb.completed) < 10 and steps < 200:
-        cb.step()
-        steps += 1
-    waits = [r.started_step - r.arrived_step for r in cb.completed]
-    print(f"continuous batching: 10 requests in {steps} steps, "
+    # --- continuous batching: a live request stream through serve() ------
+    eng = ServingEngine(model, state.params, EngineConfig(
+        max_context=256, hbm_fraction=0.25, policy="importance",
+        attention_sparsity=0.0, spec=GH200, promote_thresh=0.005,
+        telemetry_stride=8))
+    stream = [Request(rid=rid,
+                      prompt=rng.integers(0, cfg.vocab,
+                                          (32 + 16 * (rid % 3),)),
+                      max_new_tokens=8 + 4 * (rid % 3))
+              for rid in range(10)]
+    done = eng.serve(stream, num_slots=4,
+                     sampling=SamplingConfig(temperature=0.8, top_k=50),
+                     seed=0)
+    waits = [r.started_step - r.arrived_step for r in done]
+    total = sum(len(r.output) for r in done)
+    print(f"serve: {len(done)} requests, {total} sampled tokens through "
+          f"the fused loop ({eng._serve_jit._cache_size()} executable), "
           f"mean admission wait {np.mean(waits):.1f} steps, "
-          f"final page pressure {cb.page_pressure():.2f}")
+          f"pages balanced={eng.batcher.free_pages == eng.batcher.total_pages}")
+    first = min(done, key=lambda r: r.rid)
+    print(f"  rid=0 sampled: {first.output}")
 
 
 if __name__ == "__main__":

@@ -9,13 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-import numpy as np
-
 from repro.core import sa as sa_mod
-from repro.core.placement import (
-    POLICIES, BeladyOracle, CostAwareHysteresis, QuestPages, ReactiveLRU,
-    SAGuided, StaticPlacement, UnlimitedHBM,
-)
+from repro.core.placement import POLICIES, SAGuided, UnlimitedHBM
 from repro.core.simulator import HeteroMemSimulator, SimResult
 from repro.core.tiers import MemorySystemSpec
 from repro.core.traces import Trace

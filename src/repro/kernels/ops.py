@@ -13,7 +13,6 @@ the hot path — it is Python-slow).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -63,7 +63,8 @@ class CacheGeometry:
         """Pool sizes are padded to `pad_to` so the PAGES dim divides the
         model mesh axis (pools are page-sharded when kv_heads doesn't
         divide it — sequence-parallel KV, see launch/shardings.py)."""
-        rnd = lambda x: -(-max(x, 1) // pad_to) * pad_to
+        def rnd(x):
+            return -(-max(x, 1) // pad_to) * pad_to
         pages = -(-context // page_tokens)
         hbm = rnd(int(round(pages * hbm_fraction)))
         host = rnd(pages - hbm + 1)

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 This is how the distribution config is proven coherent without real
@@ -25,11 +22,15 @@ dryrun_results.jsonl.
 """
 
 import argparse
-import dataclasses
 import json
+import os
 import subprocess
 import sys
 import time
+
+# must land before any jax import (cells import jax in-process when run
+# with --arch/--shape/--mesh; the sweep spawns fresh subprocesses)
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 SHAPES = {
     # name: (seq_len, global_batch, kind)

@@ -21,7 +21,6 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # priority of logical names for the model (TP/EP) axis

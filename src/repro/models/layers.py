@@ -9,9 +9,6 @@ Pallas flash kernel.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -16,9 +16,7 @@ Decode state kinds:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -409,10 +407,13 @@ class Model:
                     logical_page_mask: Optional[jax.Array] = None):
         cfg = self.cfg
         fam = cfg.family
-        if logical_page_mask is not None and fam not in ("dense", "vlm"):
+        if logical_page_mask is not None and (
+                fam == "xlstm"
+                or (fam in ("ssm", "hybrid")
+                    and not cfg.attention_layer_ids())):
             raise ValueError(
-                f"logical_page_mask is only supported for dense/vlm, "
-                f"not {fam}")
+                f"logical_page_mask needs a paged KV cache; family {fam} "
+                f"has no attention layers")
         if fam in ("dense", "vlm"):
             if write_slot is None:
                 write_slot = default_write_slot(state)
@@ -421,18 +422,21 @@ class Model:
                                          logical_page_mask=logical_page_mask)
         if fam == "moe":
             return self._moe_decode_step(params, state, token, write_slot,
-                                         use_pallas)
+                                         use_pallas, logical_page_mask)
         if fam == "xlstm":
             return self._xlstm_decode_step(params, state, token)
         if fam in ("ssm", "hybrid"):
             return self._hybrid_decode_step(params, state, token,
-                                            write_slot, use_pallas)
+                                            write_slot, use_pallas,
+                                            logical_page_mask)
         if fam == "encdec":
             return self._encdec_decode_step(params, state, token, extra,
-                                            write_slot, use_pallas)
+                                            write_slot, use_pallas,
+                                            logical_page_mask)
         raise ValueError(fam)
 
-    def _moe_decode_step(self, params, cache, token, write_slot, use_pallas):
+    def _moe_decode_step(self, params, cache, token, write_slot, use_pallas,
+                         logical_page_mask=None):
         """MoE decode: attention layers use the paged cache; FFN is MoE."""
         cfg = self.cfg
         from repro.models.transformer import (
@@ -448,7 +452,9 @@ class Model:
         if write_slot is None:
             write_slot = default_write_slot(cache)
         cache = tfm.allocate_token_page(cache, write_slot)
-        hl, hv, el, ev = cache.tier_lists()
+        logical_page_mask = tfm.mask_write_visible(cache, logical_page_mask)
+        hl, hv, el, ev = cache.tier_lists(
+            logical_page_mask=logical_page_mask)
         il = cfg.moe.interleave
 
         def attn_part(hcur, lp, pools, slot, lists):
@@ -564,7 +570,7 @@ class Model:
         return logits, new
 
     def _hybrid_decode_step(self, params, state, token, write_slot,
-                            use_pallas):
+                            use_pallas, logical_page_mask=None):
         cfg = self.cfg
         from repro.models.transformer import (
             _update_cache_after_step, attn_qkv, _bump_valid)
@@ -587,7 +593,10 @@ class Model:
             if write_slot is None:
                 write_slot = default_write_slot(cache)
             cache = tfm.allocate_token_page(cache, write_slot)
-            hl, hv, el, ev = cache.tier_lists()
+            logical_page_mask = tfm.mask_write_visible(cache,
+                                                       logical_page_mask)
+            hl, hv, el, ev = cache.tier_lists(
+                logical_page_mask=logical_page_mask)
             pools = [cache.k_hbm, cache.v_hbm, cache.k_host, cache.v_host]
 
         site_i = 0
@@ -641,7 +650,7 @@ class Model:
         return logits, new_state
 
     def _encdec_decode_step(self, params, state, token, extra, write_slot,
-                            use_pallas):
+                            use_pallas, logical_page_mask=None):
         """Decoder step: paged self-attn + dense cross-attn.
 
         state: {"kv": PagedKVCache (self-attn), "enc": [B,F,d] encoder out}
@@ -661,7 +670,9 @@ class Model:
         if write_slot is None:
             write_slot = default_write_slot(cache)
         cache = tfm.allocate_token_page(cache, write_slot)
-        hl, hv, el, ev = cache.tier_lists()
+        logical_page_mask = tfm.mask_write_visible(cache, logical_page_mask)
+        hl, hv, el, ev = cache.tier_lists(
+            logical_page_mask=logical_page_mask)
 
         h = (params["embed"][token]
              + params["dec_pos"][pos]).astype(cfg.dtype)[:, None]

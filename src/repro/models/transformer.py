@@ -12,7 +12,6 @@ and HLO size are depth-independent, which is what makes the 64-layer /
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -22,7 +21,7 @@ from repro.kernels import ops
 from repro.kvcache.paged import PagedKVCache, write_token_layer
 from repro.models.config import ModelConfig
 from repro.models.layers import (
-    apply_rope, attention, constrain_batch, gelu_mlp, layer_norm,
+    apply_rope, attention, constrain_batch, layer_norm,
     repeat_kv, rms_norm, swiglu,
 )
 from repro.models.params import Param
@@ -240,6 +239,20 @@ def allocate_token_page(cache: PagedKVCache,
                       host_owner=host_owner)
 
 
+def mask_write_visible(cache: PagedKVCache, logical_page_mask):
+    """Quest masks must never hide the page receiving this step's token
+    (the step's own K/V lands there and attention must see it). Returns
+    the mask with the current logical page forced visible, or None.
+    Shared by every cache-backed decode path (dense/vlm/moe/hybrid/
+    encdec)."""
+    if logical_page_mask is None:
+        return None
+    B = cache.length.shape[0]
+    T = cache.k_hbm.shape[3]
+    logical = jnp.minimum(cache.length // T, cache.page_table.shape[2] - 1)
+    return logical_page_mask.at[..., jnp.arange(B), logical].set(True)
+
+
 def dense_decode_step(params, cfg: ModelConfig, cache: PagedKVCache,
                       token: jax.Array, write_slot: jax.Array,
                       use_pallas: Optional[bool] = None,
@@ -259,11 +272,7 @@ def dense_decode_step(params, cfg: ModelConfig, cache: PagedKVCache,
     h = embed_tokens(params, cfg, token[:, None])    # [B,1,d]
 
     cache = allocate_token_page(cache, write_slot)
-    if logical_page_mask is not None:
-        # the page receiving this token must always be visible
-        logical = jnp.minimum(pos // T, cache.page_table.shape[2] - 1)
-        logical_page_mask = logical_page_mask.at[
-            ..., jnp.arange(B), logical].set(True)
+    logical_page_mask = mask_write_visible(cache, logical_page_mask)
     hl, hv, el, ev = cache.tier_lists(
         logical_page_mask=logical_page_mask)  # [L,B,P*]
 

@@ -19,8 +19,6 @@ like weights.
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -1,3 +1,6 @@
 from repro.serving.engine import ServingEngine, EngineConfig, StepStats
+from repro.serving.sampling import SamplingConfig
+from repro.serving.scheduler import ContinuousBatcher, Request
 
-__all__ = ["ServingEngine", "EngineConfig", "StepStats"]
+__all__ = ["ServingEngine", "EngineConfig", "StepStats", "SamplingConfig",
+           "ContinuousBatcher", "Request"]

@@ -27,13 +27,14 @@ Semantics match the original host-side planner exactly:
 
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kvcache.migrate import MigrationPlan
-from repro.kvcache.paged import PagedKVCache
+from repro.kvcache.paged import NO_SLOT, PagedKVCache
 
 
 def choose_write_slot(cache: PagedKVCache) -> jax.Array:
@@ -95,13 +96,19 @@ def plan_capacity(geo, frac: float) -> int:
 
 
 def plan_migrations(cache: PagedKVCache, *, budget: int,
-                    promote_thresh: float
+                    promote_thresh: float,
+                    active: Optional[jax.Array] = None,
                     ) -> Tuple[MigrationPlan, jax.Array, jax.Array]:
     """Importance-EMA hysteresis planner, vectorized over [L, B].
 
     Returns (plan, n_promotes, n_demotes); the plan's capacity is
     L * B * budget regardless of how many rows are live, so
     `apply_migrations` compiles exactly once per geometry.
+
+    `active` (bool [B], optional) gates planning per batch lane: lanes
+    whose slot holds no live request (continuous batching) plan no
+    moves, so completed/empty lanes never churn pages and their counts
+    never pollute the telemetry.
     """
     imp = cache.importance                                         # [L,B,P]
     ho, eo = cache.hbm_owner, cache.host_owner
@@ -129,6 +136,8 @@ def plan_migrations(cache: PagedKVCache, *, budget: int,
     victim_logical = jnp.take_along_axis(ho, dst_slot, axis=-1)
 
     promote = (cand_imp > promote_thresh) & (victim_imp < cand_imp)
+    if active is not None:
+        promote = promote & active[None, :, None]
     demote = promote & (victim_logical >= 0)   # dst was occupied: swap out
 
     lidx = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[:, None, None],
@@ -148,6 +157,82 @@ def plan_migrations(cache: PagedKVCache, *, budget: int,
         *rows(demote, lidx, bidx, dst_slot, cand_slot, victim_logical),
     )
     return plan, promote.sum(), demote.sum()
+
+
+# --------------------------------------------------------------------------
+# per-slot (batch-lane) ops for the continuous-batching serve loop.
+# All are jit-safe [L, B]-vectorized: the fused step runs every lane and
+# these gate which lanes' state survives, so admissions/completions never
+# change traced shapes (zero retraces across the request stream).
+# --------------------------------------------------------------------------
+
+def _lane_bcast(active: jax.Array, ndim: int, axis: int) -> jax.Array:
+    """Reshape a [B] lane mask to broadcast at `axis` of an ndim array."""
+    shape = [1] * ndim
+    shape[axis] = active.shape[0]
+    return active.reshape(shape)
+
+
+def lane_merge(old: PagedKVCache, new: PagedKVCache,
+               active: jax.Array) -> PagedKVCache:
+    """Keep `new` for active lanes, `old` for the rest (active bool [B]).
+
+    With `active` all-True this is a bitwise identity on `new`, which is
+    what makes a single-request `serve` reproduce `generate` exactly.
+    """
+    def m1(o, n):
+        return jnp.where(_lane_bcast(active, n.ndim, 1), n, o)
+
+    return PagedKVCache(
+        k_hbm=m1(old.k_hbm, new.k_hbm), v_hbm=m1(old.v_hbm, new.v_hbm),
+        k_host=m1(old.k_host, new.k_host),
+        v_host=m1(old.v_host, new.v_host),
+        page_table=m1(old.page_table, new.page_table),
+        hbm_owner=m1(old.hbm_owner, new.hbm_owner),
+        host_owner=m1(old.host_owner, new.host_owner),
+        length=jnp.where(active, new.length, old.length),
+        importance=m1(old.importance, new.importance))
+
+
+def release_lanes(cache: PagedKVCache, lanes: jax.Array) -> PagedKVCache:
+    """Reclaim completed lanes (bool [B]): every page they own returns to
+    the free pool — owner maps and page table cleared, length zeroed,
+    importance reset — so `choose_write_slot` and `plan_migrations` see
+    the slots as free destinations immediately. Pool data is left in
+    place (unreachable once unmapped)."""
+    def clr(arr, fill):
+        return jnp.where(_lane_bcast(lanes, arr.ndim, 1), fill, arr)
+
+    return dataclasses.replace(
+        cache,
+        page_table=clr(cache.page_table, NO_SLOT),
+        hbm_owner=clr(cache.hbm_owner, NO_SLOT),
+        host_owner=clr(cache.host_owner, NO_SLOT),
+        length=jnp.where(lanes, 0, cache.length),
+        importance=clr(cache.importance, 0.0))
+
+
+def insert_lane(cache: PagedKVCache, lane_cache: PagedKVCache,
+                lane: jax.Array) -> PagedKVCache:
+    """Bind a freshly prefilled batch-1 cache to lane `lane` (int32
+    scalar) of the batched cache — the admission path. One compile for
+    all lanes: the lane index is data, not shape."""
+    B = cache.length.shape[0]
+    onehot = jnp.arange(B) == lane
+
+    def ins1(dst, src):
+        return jnp.where(_lane_bcast(onehot, dst.ndim, 1), src, dst)
+
+    return PagedKVCache(
+        k_hbm=ins1(cache.k_hbm, lane_cache.k_hbm),
+        v_hbm=ins1(cache.v_hbm, lane_cache.v_hbm),
+        k_host=ins1(cache.k_host, lane_cache.k_host),
+        v_host=ins1(cache.v_host, lane_cache.v_host),
+        page_table=ins1(cache.page_table, lane_cache.page_table),
+        hbm_owner=ins1(cache.hbm_owner, lane_cache.hbm_owner),
+        host_owner=ins1(cache.host_owner, lane_cache.host_owner),
+        length=jnp.where(onehot, lane_cache.length[0], cache.length),
+        importance=ins1(cache.importance, lane_cache.importance))
 
 
 def occupancy(cache: PagedKVCache) -> jax.Array:

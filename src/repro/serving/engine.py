@@ -16,7 +16,7 @@ device (see `repro.serving.control` and EXPERIMENTS.md §Fused-engine):
      host pages, promotes, demotes); the host prices it with the
      paper's Eq.(1)-(5) under a `MemorySystemSpec`.
 
-Two drive modes share the identical step function, so their logits are
+Drive modes share the identical step function, so their logits are
 bitwise identical and their byte accounting matches exactly:
 
   eager  `step(token)`         — one jitted call + host readback per
@@ -25,6 +25,14 @@ bitwise identical and their byte accounting matches exactly:
          `generate(token, n)`    `telemetry_stride` steps with the
                                  cache donated; the host reads back one
                                  [stride, 4] stats array per chunk.
+  serve  `serve(requests)`     — the headline API: continuous batching
+                                 over the same fused chunks with
+                                 per-slot active masks, on-device
+                                 sampling (temperature/top-k/top-p,
+                                 greedy at temperature 0) and per-slot
+                                 EOS/budget stop conditions; admission,
+                                 completion and page reclaim happen at
+                                 chunk boundaries without retracing.
 
 Engine policies: "static" (never migrate) and "importance" (cost-aware
 hysteresis on the attention-mass EMA — our deployable beyond-paper
@@ -34,7 +42,7 @@ policy).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,9 +51,11 @@ import numpy as np
 from repro.core.latency_model import StepTraffic, step_latency
 from repro.core.tiers import MemorySystemSpec, TPU_V5E
 from repro.kvcache.migrate import apply_migrations
-from repro.kvcache.paged import PagedKVCache
+from repro.kvcache.paged import PagedKVCache, init_cache, prefill_cache
 from repro.models.model import Model
 from repro.serving import control
+from repro.serving.sampling import SamplingConfig, make_sampler, split_lanes
+from repro.serving.scheduler import ContinuousBatcher, Request
 
 
 @dataclasses.dataclass
@@ -62,6 +72,8 @@ class EngineConfig:
     #: fused-mode scan length: decode steps run on device between
     #: telemetry readbacks (1 = eager cadence, larger = fewer syncs)
     telemetry_stride: int = 32
+    #: stop token for `serve` (None = budget-only completion)
+    eos_id: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -90,6 +102,7 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         self.stats: List[StepStats] = []
+        self._sampling = SamplingConfig()
 
     # ------------------------------------------------------------------ #
     def start(self, prompts: jax.Array, extra=None):
@@ -100,7 +113,7 @@ class ServingEngine:
         logits, state = self.model.prefill(self.params, prompts, geo,
                                            extra=extra)
         self.state = state
-        self._build_step_fns()
+        self._ensure_step_fns()
         return logits
 
     @property
@@ -110,15 +123,33 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     # the fused step: control plane + data plane + migration, all jit
     # ------------------------------------------------------------------ #
+    def _ensure_step_fns(self):
+        """(Re)build the jitted step functions only when the cache
+        geometry, sampling config, or engine config changed, so repeated
+        `serve`/`start` calls over the same shapes reuse the compiled
+        executables (cfg is part of the key because the step closures
+        bake in policy/threshold/stride/eos)."""
+        key = (self.geo, self._sampling, dataclasses.astuple(self.cfg))
+        if getattr(self, "_fns_key", None) != key:
+            self._build_step_fns()
+            self._fns_key = key
+
     def _build_step_fns(self):
         cfg, model, geo = self.cfg, self.model, self.geo
         sparsity = cfg.attention_sparsity
-        masked = sparsity > 0 and model.cfg.family in ("dense", "vlm")
+        fam = model.cfg.family
+        has_cache = fam in ("dense", "vlm", "moe", "encdec") or (
+            fam in ("ssm", "hybrid")
+            and bool(model.cfg.attention_layer_ids()))
+        masked = sparsity > 0 and has_cache
         migrate = cfg.policy != "static"
         budget = control.migration_budget(geo, cfg.migration_budget_frac)
         thresh = cfg.promote_thresh
+        eos = cfg.eos_id
+        sampler = make_sampler(self._sampling)
+        self._sampler = sampler
 
-        def step_fn(params, state, token):
+        def step_fn(params, state, token, active=None):
             cache = _get_cache(state)
             kwargs = {"write_slot": control.choose_write_slot(cache)}
             if masked:
@@ -126,13 +157,19 @@ class ServingEngine:
                     cache, sparsity)
             logits, state = model.decode_step(params, state, token,
                                               **kwargs)
+            if active is not None:
+                # per-slot masking: inactive lanes keep their pre-step
+                # cache verbatim (no token write, no length bump)
+                state = _set_cache(state, control.lane_merge(
+                    cache, _get_cache(state), active))
             cache = _get_cache(state)
             # read traffic is counted on post-decode, pre-migration
             # residency (the step's attention read the old placement)
             occ = control.occupancy(cache)
             if migrate:
                 plan, n_pro, n_dem = control.plan_migrations(
-                    cache, budget=budget, promote_thresh=thresh)
+                    cache, budget=budget, promote_thresh=thresh,
+                    active=active)
                 state = _set_cache(state, apply_migrations(cache, plan))
                 moves = jnp.stack([n_pro, n_dem]).astype(jnp.int32)
             else:
@@ -158,10 +195,42 @@ class ServingEngine:
                 body, (state, token), None, length=n)
             return state, token, toks, stats
 
+        def serve_chunk_fn(params, state, token, active, remaining, keys):
+            """Sampled, per-slot-masked fused decode for one chunk.
+
+            Carries per-slot (token, active, remaining budget, PRNG key)
+            through `lax.scan`; emits -1 for inactive lanes. Completion
+            (EOS / budget) flips the lane's active bit on device; the
+            host reclaims and re-admits at the chunk boundary.
+            """
+            def body(carry, _):
+                st, tok, act, rem, ks = carry
+                logits, st, stats = step_fn(params, st, tok, act)
+                ks, sub = split_lanes(ks)
+                nxt = sampler(logits, sub)
+                rem = rem - act.astype(rem.dtype)
+                fin = act & (rem <= 0)
+                if eos is not None:
+                    fin = fin | (act & (nxt == eos))
+                emitted = jnp.where(act, nxt, -1)
+                tok = jnp.where(act, nxt, tok)
+                act = act & ~fin
+                return (st, tok, act, rem, ks), (emitted, stats)
+
+            carry = (state, token, active, remaining, keys)
+            carry, (emitted, stats) = jax.lax.scan(
+                body, carry, None, length=max(1, cfg.telemetry_stride))
+            state, token, active, remaining, keys = carry
+            return state, token, active, remaining, keys, emitted, stats
+
         self._step_jit = jax.jit(step_fn, donate_argnums=(1,))
         self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1,))
         self._gen_jit = jax.jit(gen_fn, donate_argnums=(1,),
                                 static_argnums=(3,))
+        self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=(1,))
+        self._insert_jit = jax.jit(control.insert_lane, donate_argnums=(0,))
+        self._release_jit = jax.jit(control.release_lanes,
+                                    donate_argnums=(0,))
 
     # ------------------------------------------------------------------ #
     # drive modes
@@ -207,6 +276,176 @@ class ServingEngine:
             out.append(toks)
             done += n
         return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)
+
+    # ------------------------------------------------------------------ #
+    # continuous-batching serve loop (the headline API)
+    # ------------------------------------------------------------------ #
+    def serve(self, requests: Sequence[Request], *,
+              num_slots: Optional[int] = None,
+              sampling: Optional[SamplingConfig] = None,
+              seed: int = 0, total_pages: Optional[int] = None,
+              max_skips: int = 8) -> List[Request]:
+        """Drive a request stream end-to-end through the fused hot path.
+
+        A fixed batch of `num_slots` cache lanes decodes as ONE jitted
+        `lax.scan` chunk per `telemetry_stride` steps; per-slot active
+        masks keep finished/empty lanes bitwise-frozen inside the chunk,
+        so admissions and completions (at chunk boundaries) never change
+        traced shapes — zero retraces across the whole stream.
+
+        Per chunk boundary the host: reads back emitted tokens + the
+        per-slot (active, remaining) view, completes finished requests
+        (EOS or budget, decided ON DEVICE), releases their pages into
+        the planner's free pool (`control.release_lanes`), and admits
+        queued requests (`ContinuousBatcher.admit` -> per-request
+        prefill -> `control.insert_lane`).
+
+        Sampling (temperature / top-k / top-p) runs inside the fused
+        loop with per-slot PRNG keys derived from (`seed`, request id);
+        the default `SamplingConfig()` is greedy, and a single
+        full-length request then reproduces `generate` bitwise.
+
+        Returns the completed requests (token ids in `req.output`).
+        """
+        cfg = self.cfg
+        fam = self.model.cfg.family
+        if fam not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"serve() drives cache-backed decode states (dense/moe); "
+                f"family {fam!r} needs prefill extras or recurrent-state "
+                f"lane insertion")
+        if not requests:
+            return []
+        B = num_slots if num_slots is not None else min(len(requests), 4)
+        geo = self.model.cache_geometry(
+            B, cfg.max_context, hbm_fraction=cfg.hbm_fraction)
+        for r in requests:
+            if r.prompt is None:
+                raise ValueError(
+                    f"request {r.rid}: serve() needs prompt tokens")
+            if r.max_new_tokens < 1:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens must be >= 1")
+            if r.prompt_len + r.max_new_tokens > geo.max_tokens:
+                raise ValueError(
+                    f"request {r.rid}: {r.prompt_len}+{r.max_new_tokens} "
+                    f"tokens exceed cache capacity {geo.max_tokens}")
+        self.geo = geo
+        self.state = init_cache(geo)
+        self.stats = []
+        self._sampling = sampling or SamplingConfig()
+        self._ensure_step_fns()
+
+        pool = total_pages if total_pages is not None \
+            else B * geo.max_pages
+        batcher = ContinuousBatcher(B, pool, page_tokens=geo.page_tokens,
+                                    max_skips=max_skips)
+        self.batcher = batcher
+        for r in requests:
+            batcher.submit(r)
+
+        root = jax.random.PRNGKey(seed)
+        keys = jax.random.split(root, B)
+        token = np.zeros((B,), np.int32)
+        stride = max(1, cfg.telemetry_stride)
+        live: Dict[int, Request] = {}          # lane -> request
+
+        def admit():
+            """Admit until no progress: an admission that completes at
+            its first token (budget 1 / instant EOS) frees its slot for
+            the next queued request within the same boundary."""
+            nonlocal keys
+            while True:
+                admitted = batcher.admit()
+                if not admitted:
+                    return
+                for req in admitted:
+                    lane = req.lane
+                    rkey = jax.random.fold_in(root, req.rid)
+                    rkey, sub = jax.random.split(rkey)
+                    logits1, lane_cache = self._prefill_lane(req)
+                    self.state = self._insert_jit(self.state, lane_cache,
+                                                  jnp.int32(lane))
+                    # first token comes from the prefill logits
+                    tok0 = int(self._sampler(logits1[None], sub[None])[0])
+                    req.output.append(tok0)
+                    req.generated = 1
+                    keys = keys.at[lane].set(rkey)
+                    done = (req.generated >= req.max_new_tokens
+                            or (cfg.eos_id is not None
+                                and tok0 == cfg.eos_id))
+                    if done:
+                        self.state = self._release_jit(
+                            self.state, jnp.asarray(np.arange(B) == lane))
+                        batcher.complete(req)
+                    else:
+                        live[lane] = req
+                        token[lane] = tok0
+
+        def carry_view():
+            """The batcher's device-facing view IS the chunk carry: at a
+            boundary `generated` is synced, so remaining/active match
+            the device bitwise."""
+            view = batcher.device_view()
+            return view.active, view.remaining
+
+        admit()
+        active, remaining = carry_view()
+        while batcher.has_work:
+            if not active.any():
+                stuck = batcher.queue[0]
+                raise RuntimeError(
+                    f"request {stuck.rid} needs {stuck.pages_needed} pages"
+                    f" but the pool has only {batcher.total_pages}")
+            (self.state, tok_d, act_d, _rem_d, keys, emitted,
+             stats) = self._serve_jit(
+                self.params, self.state, jnp.asarray(token),
+                jnp.asarray(active), jnp.asarray(remaining), keys)
+            emitted = np.asarray(emitted)               # [stride, B]
+            token = np.array(tok_d)                     # writable copy:
+            done_d = ~np.asarray(act_d)                 # admit() pokes it
+            # telemetry: only steps where at least one lane decoded
+            self._record(np.asarray(stats)[emitted.max(axis=1) >= 0])
+            release = np.zeros((B,), bool)
+            for lane, req in list(live.items()):
+                toks = emitted[:, lane]
+                toks = toks[toks >= 0]
+                req.output.extend(int(t) for t in toks)
+                req.generated += len(toks)
+                if done_d[lane]:      # EOS/budget decided on device
+                    del live[lane]
+                    release[lane] = True
+                    batcher.complete(req)
+            if release.any():
+                self.state = self._release_jit(self.state,
+                                               jnp.asarray(release))
+            batcher.step_idx += stride
+            admit()
+            active, remaining = carry_view()
+        return batcher.completed
+
+    def _prefill_lane(self, req: Request):
+        """Prefill one request into a batch-1 cache lane.
+
+        The prompt is right-padded to a page boundary so admission
+        compiles once per page-rounded prompt length: under causal
+        attention the pads influence nothing at positions < prompt_len,
+        the padded tail of the last page sits behind the page's valid
+        count (invisible to the kernel), and decode overwrites it as
+        the sequence grows. Returns (last-prompt-position logits [V],
+        batch-1 PagedKVCache).
+        """
+        geo = self.geo
+        S = req.prompt_len
+        pad = (-S) % geo.page_tokens
+        prompt = jnp.asarray(np.asarray(req.prompt),
+                             jnp.int32).reshape(1, -1)
+        if pad:
+            prompt = jnp.pad(prompt, ((0, 0), (0, pad)))
+        geo1 = dataclasses.replace(geo, batch=1)
+        logits, (k, v) = self.model.forward(self.params, prompt,
+                                            collect_kv=True)
+        return logits[0, S - 1], prefill_cache(geo1, k, v, S)
 
     # ------------------------------------------------------------------ #
     # telemetry (host side, Eq. (1)-(5) pricing)

@@ -1,0 +1,79 @@
+"""jit-safe token sampling for the fused decode loop.
+
+The sampler is a STATIC configuration: `make_sampler(cfg)` returns a
+pure function `(logits [B, V], keys [B]) -> tokens [B]` that is traced
+into the fused step, so changing the sampling config recompiles the
+serve loop (once) but sampling itself never leaves the device.
+
+Greedy decoding is the zero-temperature special case and compiles to a
+plain argmax — bitwise identical to `ServingEngine.generate`'s greedy
+path, which is what the single-request parity tests pin.
+
+Per-slot PRNG keys are threaded through `lax.scan` by the caller (see
+`ServingEngine.serve`): each batch lane samples with its own key, so a
+request's tokens depend only on (its key, its logits) — reproducible
+regardless of which other requests share the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    #: 0.0 = greedy argmax (the exact `generate` path)
+    temperature: float = 0.0
+    #: keep only the k most likely tokens (0 = off)
+    top_k: int = 0
+    #: nucleus sampling: keep the smallest set of tokens whose
+    #: cumulative probability reaches top_p (1.0 = off)
+    top_p: float = 1.0
+
+
+def split_lanes(keys: jax.Array):
+    """Advance per-lane key chains: [B] keys -> (next [B], subkeys [B])."""
+    pairs = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def _top_k_filter(logits: jax.Array, k: int) -> jax.Array:
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits >= kth, logits, -jnp.inf)
+
+
+def _top_p_filter(logits: jax.Array, top_p: float) -> jax.Array:
+    """Mask tokens outside the nucleus. Keeps every token whose
+    cumulative probability BEFORE it is < top_p, so at least the most
+    likely token always survives."""
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    keep = cum_before < top_p
+    thresh = jnp.min(jnp.where(keep, sorted_desc, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits >= thresh, logits, -jnp.inf)
+
+
+def make_sampler(cfg: SamplingConfig) -> Callable:
+    """Build `(logits [B, V], keys [B]) -> tokens [B] int32`."""
+    if cfg.temperature <= 0.0:
+        def greedy(logits, keys):
+            del keys
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy
+
+    def sample(logits, keys):
+        x = logits.astype(jnp.float32) / cfg.temperature
+        if cfg.top_k > 0:
+            x = _top_k_filter(x, cfg.top_k)
+        if cfg.top_p < 1.0:
+            x = _top_p_filter(x, cfg.top_p)
+        draw = jax.vmap(lambda key, row: jax.random.categorical(key, row))
+        return draw(keys, x).astype(jnp.int32)
+
+    return sample

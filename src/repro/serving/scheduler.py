@@ -12,8 +12,22 @@ batch of live slots over the engine's paged cache:
     batching, Sarathi/vLLM-style at step granularity);
   * fairness — FIFO with a starvation bound (max_skips).
 
-The scheduler is pure control plane: it never touches arrays. It is
-exercised by tests/test_scheduler.py and examples/serve_loop.py.
+The scheduler is pure control plane: it never touches arrays. Two ways
+to drive it:
+
+  * `step()` — the self-contained behavioural simulation (admit, count
+    one generated token per live request, complete on budget);
+  * `admit()` / `complete()` / `device_view()` — the engine-facing
+    protocol used by `ServingEngine.serve`: the ENGINE decides when a
+    request finishes (EOS or budget, observed on device) and calls
+    `complete`; at every chunk boundary `device_view` exports the
+    per-slot active mask, remaining-token budgets, and slot->cache-lane
+    bindings that become the fused decode loop's carry.
+
+Page accounting uses the engine's real page size (`page_tokens`,
+stamped onto each request at submit) so the scheduler can never
+diverge from the cache geometry. Exercised by tests/test_serving.py
+and tests/test_serve_loop.py.
 """
 
 from __future__ import annotations
@@ -22,20 +36,37 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt_len: int
-    max_new_tokens: int
+    prompt_len: int = 0
+    max_new_tokens: int = 16
+    #: prompt token ids (any int sequence) — required for real serving
+    #: via `ServingEngine.serve`; optional for scheduler-only sims.
+    prompt: Optional[object] = None
+    #: page size used for page accounting; stamped by the batcher at
+    #: submit so it always matches the engine's cache geometry.
+    page_tokens: int = 16
     arrived_step: int = 0
     started_step: int = -1
     finished_step: int = -1
     generated: int = 0
+    #: cache lane (batch row) bound while live; -1 when not in a slot
+    lane: int = -1
+    #: generated token ids (filled by the serving engine)
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.prompt is not None and not self.prompt_len:
+            self.prompt_len = int(np.asarray(self.prompt).shape[-1])
 
     @property
     def pages_needed(self) -> int:
-        return -(-(self.prompt_len + self.max_new_tokens) // 16)
+        return -(-(self.prompt_len + self.max_new_tokens)
+                 // self.page_tokens)
 
 
 @dataclasses.dataclass
@@ -47,12 +78,23 @@ class SlotState:
         return self.request is None
 
 
+@dataclasses.dataclass
+class DeviceView:
+    """Device-facing snapshot of the batch: what the fused decode loop
+    needs to know, as arrays (see ServingEngine.serve)."""
+    active: np.ndarray       # [num_slots] bool — slot has a live request
+    remaining: np.ndarray    # [num_slots] int32 — token budget left
+    rids: np.ndarray         # [num_slots] int32 — request id, -1 if free
+    lane_of: Dict[int, int]  # rid -> cache lane (page-table binding)
+
+
 class ContinuousBatcher:
     def __init__(self, num_slots: int, total_pages: int,
-                 max_skips: int = 8):
+                 page_tokens: int = 16, max_skips: int = 8):
         self.slots: List[SlotState] = [SlotState() for _ in range(num_slots)]
         self.total_pages = total_pages
         self.free_pages = total_pages
+        self.page_tokens = page_tokens
         self.queue: Deque[Request] = deque()
         self.max_skips = max_skips
         self.step_idx = 0
@@ -60,31 +102,81 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
+        req.page_tokens = self.page_tokens
         req.arrived_step = self.step_idx
+        # reset per-run mutable state so a Request object can be
+        # re-submitted (fresh serve call / sim) without carrying the
+        # previous run's tokens or bindings
+        req.started_step = -1
+        req.finished_step = -1
+        req.generated = 0
+        req.lane = -1
+        req.output = []
         self.queue.append(req)
 
-    def _admit(self) -> None:
+    def admit(self) -> List[Request]:
+        """Admit queued requests into free slots (FIFO, starvation-bounded
+        leapfrogging). Returns the newly admitted requests, each with its
+        `lane` binding set."""
         skips = 0
+        admitted: List[Request] = []
         requeue: List[Request] = []
         while self.queue and skips <= self.max_skips:
-            slot = next((s for s in self.slots if s.free), None)
-            if slot is None:
+            lane = next((i for i, s in enumerate(self.slots) if s.free),
+                        None)
+            if lane is None:
                 break
             req = self.queue.popleft()
             if req.pages_needed <= self.free_pages:
-                slot.request = req
+                self.slots[lane].request = req
+                req.lane = lane
                 req.started_step = self.step_idx
                 self.free_pages -= req.pages_needed
+                admitted.append(req)
             else:
                 requeue.append(req)
                 skips += 1
         for r in reversed(requeue):
             self.queue.appendleft(r)
+        return admitted
+
+    def complete(self, req: Request) -> None:
+        """Release a live request's slot and pages (engine-driven
+        completion: EOS or budget, observed on device)."""
+        assert req.lane >= 0 and self.slots[req.lane].request is req, req
+        self.slots[req.lane].request = None
+        self.free_pages += req.pages_needed
+        req.finished_step = self.step_idx
+        req.lane = -1
+        self.completed.append(req)
+
+    # ------------------------------------------------------------------ #
+    def device_view(self) -> DeviceView:
+        n = len(self.slots)
+        active = np.zeros((n,), bool)
+        remaining = np.zeros((n,), np.int32)
+        rids = np.full((n,), -1, np.int32)
+        lane_of: Dict[int, int] = {}
+        for i, s in enumerate(self.slots):
+            r = s.request
+            if r is None:
+                continue
+            active[i] = True
+            remaining[i] = r.max_new_tokens - r.generated
+            rids[i] = r.rid
+            lane_of[r.rid] = i
+        return DeviceView(active=active, remaining=remaining, rids=rids,
+                          lane_of=lane_of)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(not s.free for s in self.slots)
 
     # ------------------------------------------------------------------ #
     def step(self) -> List[Request]:
-        """Advance one decode step; returns the active requests."""
-        self._admit()
+        """Behavioural simulation: advance one decode step; returns the
+        active requests. (The real engine drives admit/complete itself.)"""
+        self.admit()
         active = []
         for s in self.slots:
             r = s.request
@@ -92,10 +184,7 @@ class ContinuousBatcher:
                 continue
             r.generated += 1
             if r.generated >= r.max_new_tokens:
-                r.finished_step = self.step_idx
-                self.completed.append(r)
-                self.free_pages += r.pages_needed
-                s.request = None
+                self.complete(r)
             else:
                 active.append(r)
         self.step_idx += 1

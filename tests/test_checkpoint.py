@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.ckpt import is_committed, restore_pytree, save_pytree
+from repro.checkpoint.ckpt import restore_pytree, save_pytree
 from repro.checkpoint.manager import CheckpointManager
 
 

@@ -3,10 +3,9 @@ analytically known FLOP counts."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import analyze, parse_module
+from repro.launch.hlo_cost import analyze
 
 
 def _hlo(fn, *specs):

@@ -3,13 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kvcache.migrate import MigrationPlan, apply_migrations
-from repro.kvcache.paged import (
-    CacheGeometry, init_cache, prefill_cache,
-)
+from repro.kvcache.paged import CacheGeometry, prefill_cache
 
 
 def _geo(hbm=2, host=4, layers=2, batch=2):

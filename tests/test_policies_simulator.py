@@ -4,14 +4,10 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.experiment import Workload, make_sim, run_strategy, tune_sa
-from repro.core.placement import (
-    POLICIES, BeladyOracle, QuestPages, ReactiveLRU, SAGuided,
-    StaticPlacement,
-)
+from repro.core.experiment import Workload, make_sim, run_strategy
+from repro.core.placement import POLICIES, SAGuided
 from repro.core.sa import SAConfig
-from repro.core.simulator import HeteroMemSimulator
-from repro.core.tiers import GH200, TPU_V5E
+from repro.core.tiers import GH200
 from repro.core.traces import synthetic_trace
 
 WL = Workload(bytes_per_token_layer=2 * 8 * 128 * 2, num_layers=4)

@@ -1,8 +1,6 @@
 """Recurrent-family numerics: chunked parallel forms vs sequential
 oracles vs one-token decode (Mamba2 SSD, mLSTM, sLSTM)."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,8 +1,6 @@
 """End-to-end behaviour tests: the paper's experiment pipeline and the
 full train->checkpoint->restore->serve loop on one host."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
