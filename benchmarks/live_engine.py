@@ -74,6 +74,9 @@ def run(print_csv: bool = True, steps: int = 24):
     modeled_tps = total / s["modeled_total_s"]
     rows.append(("engine/serve/stream", wall_us, modeled_tps))
     rows.append(("engine/serve/hit_rate", 0.0, s["mean_hbm_hit_rate"]))
+    if done.ttft:
+        rows.append(("engine/serve/ttft_p50", done.ttft["p50"] * 1e6,
+                     done.ttft["p50"]))
 
     if print_csv:
         for name, us, derived in rows:

@@ -20,20 +20,39 @@ Three drive modes over the SAME model and two-tier paged cache:
 A fourth mode measures the headline serving API:
 
   serve  — `ServingEngine.serve`: a mixed-length request stream through
-           the same fused chunks with per-slot active masking, on-device
-           sampling, and chunk-boundary admission/reclaim.
+           the same fused chunks of MIXED prefill+decode steps (chunked
+           prefill inside the loop), with per-slot active masking,
+           on-device sampling, and chunk-boundary admission/reclaim.
+           The stream spans >= 3 distinct page-rounded prompt lengths
+           and the serve chunk must stay at ONE executable — admissions
+           no longer compile per prompt length. TTFT/TPOT percentiles
+           from the ServeReport land in BENCH_engine.json.
+
+A fifth comparison isolates what chunked prefill bought:
+
+  eager-admission — `EagerAdmissionEngine` replicates PR 2's admission
+           (a blocking whole-prompt batch-1 forward per request, one
+           compile per page-rounded prompt length, `insert_lane` copy).
+           A long prompt of a FRESH page-rounded length admitted
+           mid-stream shows the TTFT gap: the baseline stalls every
+           decode lane behind the prompt forward (plus its compile);
+           the chunked engine overlaps prefill slices with decode.
 
 Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite). The headline
 is fused/host steps-per-second; fused executable counts are asserted to
-stay at one compile per scan length (zero migration-driven retraces).
+stay at one compile per scan length (zero migration-driven or
+admission-driven retraces).
 
 Run:  PYTHONPATH=src python benchmarks/perf_engine.py
 CI:   PYTHONPATH=src python benchmarks/perf_engine.py --ci
-      (reduced geometry; additionally asserts fused >= eager steps/s)
+      (reduced geometry; additionally asserts fused >= eager steps/s
+      and chunked-admission TTFT < eager-admission TTFT for the
+      mid-stream long prompt)
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 
@@ -44,7 +63,9 @@ import numpy as np
 from repro import configs
 from repro.core.tiers import GH200
 from repro.kvcache.migrate import MigrationPlan, apply_migrations
+from repro.kvcache.paged import prefill_cache
 from repro.models.model import Model
+from repro.serving import control
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.scheduler import Request
 
@@ -156,6 +177,56 @@ class HostLoopEngine(ServingEngine):
 
 
 # --------------------------------------------------------------------------- #
+# PR 2-style eager admission (the serialization chunked prefill removed)
+# --------------------------------------------------------------------------- #
+
+class EagerAdmissionEngine(ServingEngine):
+    """Eager-admission baseline: admission prefills the WHOLE prompt on
+    the spot with a batch-1 `model.forward` (compiling once per
+    page-rounded prompt length), binds it via `control.insert_lane`,
+    and samples the first token on host — PR 2's retired admission
+    path, kept faithful here (like `HostLoopEngine`) so the chunked-
+    prefill TTFT win stays measurable PR over PR."""
+
+    def _admit_lane(self, req, hs):
+        geo = self.geo
+        S = req.prompt_len
+        pad = (-S) % geo.page_tokens
+        prompt = jnp.asarray(np.asarray(req.prompt),
+                             jnp.int32).reshape(1, -1)
+        if pad:
+            prompt = jnp.pad(prompt, ((0, 0), (0, pad)))
+        logits, (k, v) = self.model.forward(self.params, prompt,
+                                            collect_kv=True)
+        lane_cache = prefill_cache(dataclasses.replace(geo, batch=1),
+                                   k, v, S)
+        if not hasattr(self, "_insert_jit"):
+            self._insert_jit = jax.jit(control.insert_lane,
+                                       donate_argnums=(0,))
+        lane = req.lane
+        self.state = self._insert_jit(self.state, lane_cache,
+                                      jnp.int32(lane))
+        rkey = jax.random.fold_in(hs["root"], req.rid)
+        rkey, sub = jax.random.split(rkey)
+        tok0 = int(self._sampler(logits[0, S - 1][None], sub[None])[0])
+        req.output.append(tok0)
+        req.generated = 1
+        req.prefilled = S              # device sees a decode-ready lane
+        req.first_token_at = time.time()
+        req.phase = "decoding"
+        hs["prompt_buf"][lane, :] = 0
+        hs["token"][lane] = tok0
+        hs["keys"][lane] = np.array(rkey)
+        done = (req.generated >= req.max_new_tokens
+                or (self.cfg.eos_id is not None
+                    and tok0 == self.cfg.eos_id))
+        if done:
+            mask = np.arange(geo.batch) == lane
+            self.state = self._release_jit(self.state, jnp.asarray(mask))
+            self.batcher.complete(req)     # lane -> -1: serve() skips it
+
+
+# --------------------------------------------------------------------------- #
 
 def _engine(model, params, policy, klass=ServingEngine, batch=2):
     eng = klass(model, params, EngineConfig(
@@ -190,12 +261,15 @@ def _time_fused(eng, steps):
 
 
 def _time_serve(model, params, *, stride, max_context, n_requests=6):
-    """Mixed-length request stream through `serve`; returns (tokens/s,
-    serve-chunk executable count)."""
+    """Mixed-length request stream through `serve`; prompts span three
+    distinct page-rounded lengths (2/3/4 pages), which under eager
+    admission cost three separate prefill compiles — the chunked loop
+    must hold ONE serve-chunk executable across the whole stream.
+    Returns (tokens/s, serve-chunk executable count, ServeReport)."""
     eng = ServingEngine(model, params, EngineConfig(
         max_context=max_context, hbm_fraction=0.25, policy="importance",
         attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4,
-        telemetry_stride=stride))
+        telemetry_stride=stride, prefill_chunk=16))
     rng = np.random.default_rng(0)
     def mk():
         return [Request(rid=i,
@@ -206,10 +280,46 @@ def _time_serve(model, params, *, stride, max_context, n_requests=6):
     eng.serve(mk(), num_slots=2, seed=0)                    # compile
     reqs = mk()
     t0 = time.perf_counter()
-    done = eng.serve(reqs, num_slots=2, seed=1)
-    total = sum(len(r.output) for r in done)
+    report = eng.serve(reqs, num_slots=2, seed=1)
+    total = sum(len(r.output) for r in report)
     return total / (time.perf_counter() - t0), \
-        eng._serve_jit._cache_size()
+        eng._serve_jit._cache_size(), report
+
+
+def _ttft_long_prompt(model, params, klass, *, stride, max_context,
+                      long_len):
+    """TTFT of a long prompt admitted MID-STREAM behind short requests.
+
+    The warmup stream covers the short lengths only, so the timed
+    stream's long prompt arrives with a fresh page-rounded length —
+    under eager admission that is a blocking compile + whole-prompt
+    forward at the admission boundary; under chunked prefill it is just
+    more slices through the already-compiled mixed-step executable.
+    Returns the long request's TTFT in seconds."""
+    eng = klass(model, params, EngineConfig(
+        max_context=max_context, hbm_fraction=0.25, policy="importance",
+        attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4,
+        telemetry_stride=stride, prefill_chunk=16))
+    rng = np.random.default_rng(1)
+
+    def mk(with_long):
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab,
+                                            (32 + 16 * (i % 2),)),
+                        max_new_tokens=stride + 2)
+                for i in range(4)]
+        if with_long:
+            reqs.append(Request(
+                rid=99, prompt=rng.integers(0, model.cfg.vocab,
+                                            (long_len,)),
+                max_new_tokens=4))
+        return reqs
+
+    eng.serve(mk(False), num_slots=2, seed=0)               # warmup
+    report = eng.serve(mk(True), num_slots=2, seed=1)
+    long_req = next(r for r in report if r.rid == 99)
+    assert long_req.started_step > 0, "long prompt was not mid-stream"
+    return long_req.first_token_at - long_req.submitted_at
 
 
 def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
@@ -257,15 +367,48 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
         rows.append((f"perf/{policy}/fused_vs_host", 0.0,
                      fused_sps / host_sps))
 
-    serve_tps, serve_exes = _time_serve(
-        model, params, stride=8 if ci else STRIDE,
-        max_context=128 if ci else 512, n_requests=4 if ci else 6)
-    assert serve_exes == 1, serve_exes     # zero retraces across stream
+    serve_stride = 8 if ci else STRIDE
+    serve_ctx = 128 if ci else 512
+    serve_tps, serve_exes, report = _time_serve(
+        model, params, stride=serve_stride, max_context=serve_ctx,
+        n_requests=4 if ci else 6)
+    # zero retraces across a stream spanning >= 3 page-rounded prompt
+    # lengths: ONE mixed prefill+decode executable, admissions included
+    assert serve_exes == 1, serve_exes
+    ttft_chunked = _ttft_long_prompt(
+        model, params, ServingEngine, stride=serve_stride,
+        max_context=serve_ctx, long_len=96)
+    ttft_eager = _ttft_long_prompt(
+        model, params, EagerAdmissionEngine, stride=serve_stride,
+        max_context=serve_ctx, long_len=96)
+    if ci:
+        # the fresh-length admission compile + blocking forward makes
+        # this a wide margin; a chunked-prefill regression (per-length
+        # retrace, serialized admission) would erase it
+        assert ttft_chunked < ttft_eager, (ttft_chunked, ttft_eager)
     result["rows"]["serve"] = {
         "tokens_per_s": serve_tps,
         "serve_chunk_executables": serve_exes,
+        "ttft_s": report.ttft,
+        "tpot_s": report.tpot,
+        "ttft_long_midstream_chunked_s": ttft_chunked,
+        "ttft_long_midstream_eager_s": ttft_eager,
     }
     rows.append(("perf/serve/stream", 1e6 / serve_tps, serve_tps))
+    if report.ttft:
+        rows.append(("perf/serve/ttft_p50", report.ttft["p50"] * 1e6,
+                     report.ttft["p50"]))
+        rows.append(("perf/serve/ttft_p95", report.ttft["p95"] * 1e6,
+                     report.ttft["p95"]))
+    if report.tpot:
+        rows.append(("perf/serve/tpot_p50", report.tpot["p50"] * 1e6,
+                     report.tpot["p50"]))
+        rows.append(("perf/serve/tpot_p95", report.tpot["p95"] * 1e6,
+                     report.tpot["p95"]))
+    rows.append(("perf/serve/ttft_long_chunked", ttft_chunked * 1e6,
+                 ttft_chunked))
+    rows.append(("perf/serve/ttft_long_eager", ttft_eager * 1e6,
+                 ttft_eager))
 
     with open("BENCH_engine.json", "w") as f:
         json.dump(result, f, indent=2)

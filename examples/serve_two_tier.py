@@ -75,6 +75,11 @@ def main():
           f"the fused loop ({eng._serve_jit._cache_size()} executable), "
           f"mean admission wait {np.mean(waits):.1f} steps, "
           f"pages balanced={eng.batcher.free_pages == eng.batcher.total_pages}")
+    if done.ttft:
+        print(f"  ttft p50={done.ttft['p50'] * 1e3:.1f}ms "
+              f"p95={done.ttft['p95'] * 1e3:.1f}ms   "
+              f"tpot p50={done.tpot['p50'] * 1e3:.2f}ms "
+              f"p95={done.tpot['p95'] * 1e3:.2f}ms")
     first = min(done, key=lambda r: r.rid)
     print(f"  rid=0 sampled: {first.output}")
 

@@ -242,6 +242,78 @@ def write_token_layer(k_hbm_l, v_hbm_l, k_host_l, v_host_l, slot, offset,
     return k_hbm_l, v_hbm_l, k_host_l, v_host_l
 
 
+def write_tokens_layer(k_hbm_l, v_hbm_l, k_host_l, v_host_l, slot, offset,
+                       k_new, v_new, valid):
+    """Write a slice of tokens' (k, v) into physical pages (one layer).
+
+    The chunked-prefill generalization of `write_token_layer`: pools
+    [B, P, T, KH, HD]; slot/offset/valid [B, C] int32/bool; k_new/v_new
+    [B, C, KH, HD]. slot >= hbm_pages addresses the host pool; entries
+    with valid == False scatter to an OOB-high sentinel and are dropped
+    (partial-page appends: a slice may start and end mid-page, and may
+    straddle page and tier boundaries).
+    """
+    hbm_pages = k_hbm_l.shape[1]
+    host_pages = k_host_l.shape[1]
+    in_hbm = valid & (slot < hbm_pages)
+    in_host = valid & (slot >= hbm_pages)
+    hbm_slot = jnp.where(in_hbm, slot, jnp.int32(hbm_pages))
+    host_slot = jnp.where(in_host, slot - hbm_pages, jnp.int32(host_pages))
+
+    def upd(pool, s, val):
+        bidx = jnp.arange(pool.shape[0])[:, None]
+        return pool.at[bidx, s, offset].set(val.astype(pool.dtype),
+                                            mode="drop")
+
+    k_hbm_l = upd(k_hbm_l, hbm_slot, k_new)
+    v_hbm_l = upd(v_hbm_l, hbm_slot, v_new)
+    k_host_l = upd(k_host_l, host_slot, k_new)
+    v_host_l = upd(v_host_l, host_slot, v_new)
+    return k_hbm_l, v_hbm_l, k_host_l, v_host_l
+
+
+def allocate_prompt_pages(cache: PagedKVCache, pos: jax.Array,
+                          valid: jax.Array, n_new: jax.Array
+                          ) -> PagedKVCache:
+    """Register the logical pages receiving a prompt slice and bump
+    lane lengths (chunked prefill at an offset).
+
+    pos/valid: [B, C] absolute token positions and their validity;
+    n_new: [B] tokens actually consumed per lane (0 for lanes not
+    prefilling). Placement is the paper's Static Placement — logical
+    page p maps to HBM slot p while p < hbm_pages, else host slot
+    p - hbm_pages — exactly what `prefill_cache` produces, so a prompt
+    prefilled chunk-by-chunk lands in the same physical slots as a
+    whole-prompt prefill (the migration planner takes over only once
+    the lane starts decoding). Half-filled pages are registered in the
+    owner maps immediately, so occupancy telemetry and write-slot
+    choice see them as resident ("placement-visible")."""
+    T = cache.k_hbm.shape[3]
+    hbm_pages = cache.k_hbm.shape[2]
+    host_pages = cache.k_host.shape[2]
+    L = cache.page_table.shape[0]
+    max_pages = cache.page_table.shape[2]
+    B, C = pos.shape
+    page = (pos // T).astype(jnp.int32)
+    lidx = jnp.arange(L)[:, None, None]
+    bidx = jnp.arange(B)[None, :, None]
+
+    pidx = jnp.where(valid, page, max_pages)[None]
+    page_table = cache.page_table.at[lidx, bidx, pidx].set(
+        page[None], mode="drop")
+    hslot = jnp.where(valid & (page < hbm_pages), page, hbm_pages)[None]
+    hbm_owner = cache.hbm_owner.at[lidx, bidx, hslot].set(
+        page[None], mode="drop")
+    eslot = jnp.where(valid & (page >= hbm_pages), page - hbm_pages,
+                      host_pages)[None]
+    host_owner = cache.host_owner.at[lidx, bidx, eslot].set(
+        page[None], mode="drop")
+    return dataclasses.replace(
+        cache, page_table=page_table, hbm_owner=hbm_owner,
+        host_owner=host_owner,
+        length=cache.length + n_new.astype(cache.length.dtype))
+
+
 def append_token(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
                  write_slot: jax.Array, write_offset: jax.Array
                  ) -> PagedKVCache:

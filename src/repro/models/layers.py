@@ -106,6 +106,28 @@ def repeat_kv(x: jax.Array, q_per_kv: int) -> jax.Array:
     return x.reshape(b, s, kh * q_per_kv, d)
 
 
+def prefix_chunk_attention(q, k, v, q_positions) -> jax.Array:
+    """Causal attention of a query chunk against a prefix key buffer.
+
+    q: [B, C, H, D] (a slice of a longer sequence); k, v: [B, S, H, D]
+    (repeat GQA heads before calling); q_positions: [B, C] absolute
+    position of each query. Key i is visible to the query at absolute
+    position p iff i <= p — keys past the written prefix contribute
+    exact zeros (NEG_INF score -> exp underflows to 0.0), so the result
+    for a valid query row is bitwise-identical to `naive_attention`
+    over just the visible prefix. This is what makes chunked prefill at
+    any token budget reproduce the whole-prompt forward bitwise (see
+    transformer.dense_prefill_chunk).
+    """
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, None, None, :] <= q_positions[:, None, :, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
 def naive_attention(q, k, v, *, causal: bool = True,
                     q_offset: int = 0) -> jax.Array:
     """Reference attention. q: [B,Sq,H,D], k/v: [B,Sk,H,D]."""

@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kvcache import paged as paged_mod
 from repro.kvcache.paged import (
     CacheGeometry, PagedKVCache, init_cache, prefill_cache,
 )
@@ -348,6 +349,95 @@ class Model:
                 logits, state = self.decode_step(params, state, tokens[:, t])
             return logits, state
         raise ValueError(f"prefill not supported for {fam}")
+
+    # ------------------------------------------------------------------ #
+    # chunked prefill (mixed prefill+decode serve steps)
+    # ------------------------------------------------------------------ #
+    def prefill_chunk(self, params, cache: PagedKVCache, tokens, start,
+                      n_valid):
+        """Consume a [B, C] prompt slice directly into the paged cache.
+
+        The Sarathi-style half of a mixed serve step: lanes in prefill
+        mode advance `n_valid` tokens from per-lane offset `start`,
+        writing K/V pages in place (static placement) — no batch-1 side
+        cache, no per-prompt-length compiles (C is the only traced
+        shape). Returns (logits [B, C, V], cache); sampling the logits
+        at index n_valid-1 yields the request's first output token on
+        device. See transformer.dense_prefill_chunk.
+        """
+        fam = self.cfg.family
+        if fam == "dense":
+            return tfm.dense_prefill_chunk(params, self.cfg, cache,
+                                           tokens, start, n_valid)
+        if fam == "moe":
+            return self._moe_prefill_chunk(params, cache, tokens, start,
+                                           n_valid)
+        raise NotImplementedError(
+            f"chunked prefill covers cache-backed families (dense/moe); "
+            f"family {fam!r} needs prefill extras or recurrent state")
+
+    def _moe_prefill_chunk(self, params, cache, tokens, start, n_valid):
+        """MoE chunked prefill: paged-attention chunk blocks + MoE FFN,
+        mirroring `_moe_forward`'s layer structure (interleave 1 or 2).
+
+        NOTE: MoE capacity routing groups over the B*C tokens of the
+        slice, so (exactly as in any chunked-prefill system) capacity
+        drops may differ between chunk budgets — the dense bitwise
+        invariant does not extend to moe outputs.
+        """
+        cfg = self.cfg
+        C = tokens.shape[1]
+        T = cache.k_hbm.shape[3]
+        pos, page, offset, valid = tfm.chunk_coords(T, C, start, n_valid)
+        h = tfm.embed_tokens(params, cfg, tokens)
+        il = cfg.moe.interleave
+
+        if il == 1:
+            def body(carry, xs):
+                lp, kh, vh, ke, ve = xs
+                hcur, pools = tfm.prefill_chunk_attn(
+                    carry, lp, cfg, (kh, vh, ke, ve), pos, page, offset,
+                    valid)
+                hcur = moe_mod.moe_block(hcur, lp, cfg)
+                return hcur, pools
+            xs = (params["layers"], cache.k_hbm, cache.v_hbm,
+                  cache.k_host, cache.v_host)
+            h, (kh, vh, ke, ve) = jax.lax.scan(body, h, xs)
+        else:
+            nb = cfg.num_layers // 2
+
+            def reshape2(a):
+                return a.reshape((nb, 2) + a.shape[1:])
+
+            c2 = jax.tree.map(reshape2, (cache.k_hbm, cache.v_hbm,
+                                         cache.k_host, cache.v_host))
+
+            def body(carry, xs):
+                lp, (kh2, vh2, ke2, ve2) = xs
+                hcur, pa = tfm.prefill_chunk_attn(
+                    carry, lp["dense_attn"], cfg,
+                    (kh2[0], vh2[0], ke2[0], ve2[0]), pos, page, offset,
+                    valid)
+                hcur = tfm.dense_mlp_block(hcur, lp["dense_mlp"], cfg)
+                hcur, pb = tfm.prefill_chunk_attn(
+                    hcur, lp["moe_attn"], cfg,
+                    (kh2[1], vh2[1], ke2[1], ve2[1]), pos, page, offset,
+                    valid)
+                hcur = moe_mod.moe_block(hcur, lp["moe"], cfg)
+                pools = jax.tree.map(lambda a, b: jnp.stack([a, b]),
+                                     pa, pb)
+                return hcur, pools
+
+            h, pools2 = jax.lax.scan(body, h, (params["layers"], c2))
+            kh, vh, ke, ve = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), pools2)
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = tfm.unembed(params, cfg, h)
+        import dataclasses as dc
+        cache = dc.replace(cache, k_hbm=kh, v_hbm=vh, k_host=ke, v_host=ve)
+        cache = paged_mod.allocate_prompt_pages(cache, pos, valid, n_valid)
+        return logits, cache
 
     # ------------------------------------------------------------------ #
     # decode

@@ -18,11 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.kvcache.paged import PagedKVCache, write_token_layer
+from repro.kvcache.paged import (
+    PagedKVCache, allocate_prompt_pages, write_token_layer,
+    write_tokens_layer,
+)
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     apply_rope, attention, constrain_batch, layer_norm,
-    repeat_kv, rms_norm, swiglu,
+    prefix_chunk_attention, repeat_kv, rms_norm, swiglu,
 )
 from repro.models.params import Param
 
@@ -347,6 +350,98 @@ def _update_cache_after_step(cache, k_hbm, v_hbm, k_host, v_host, imp,
     return dc.replace(cache, k_hbm=k_hbm, v_hbm=v_hbm, k_host=k_host,
                       v_host=v_host, length=cache.length + 1,
                       importance=importance)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (Sarathi-style) into the paged cache at an offset
+# ---------------------------------------------------------------------------
+
+def prefill_chunk_attn(hcur, lp, cfg: ModelConfig, pools, pos, page,
+                       offset, valid):
+    """One layer's chunked-prefill attention block over the paged pools.
+
+    hcur: [B, C, d] residual stream for a prompt slice; pools:
+    (k_hbm_l, v_hbm_l, k_host_l, v_host_l); pos/page/offset/valid:
+    [B, C] absolute positions and their page coordinates. Writes the
+    slice's K/V at static-placement slots (slot == logical page), then
+    attends causally against the pools flattened in slot order — which
+    IS logical token order while the lane is prefilling, because the
+    migration planner only touches lanes that have started decoding.
+    Shared by the dense and moe chunked-prefill forwards.
+    """
+    kh, vh, ke, ve = pools
+    B, C = pos.shape
+    T = kh.shape[2]
+    hcur = constrain_batch(hcur)
+    x = rms_norm(hcur, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = attn_qkv(x, lp, cfg, pos)
+    kh, vh, ke, ve = write_tokens_layer(kh, vh, ke, ve, page, offset,
+                                        k, v, valid)
+    keys = jnp.concatenate([kh, ke], axis=1)        # [B, Ph+Pe, T, KH, HD]
+    vals = jnp.concatenate([vh, ve], axis=1)
+    S = keys.shape[1] * T
+    keys = keys.reshape(B, S, cfg.kv_heads, cfg.head_dim)
+    vals = vals.reshape(B, S, cfg.kv_heads, cfg.head_dim)
+    o = prefix_chunk_attention(q, repeat_kv(keys, cfg.q_per_kv),
+                               repeat_kv(vals, cfg.q_per_kv), pos)
+    hcur = hcur + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    return hcur, (kh, vh, ke, ve)
+
+
+def chunk_coords(page_tokens: int, chunk: int, start: jax.Array,
+                 n_valid: jax.Array):
+    """Page coordinates for a `chunk`-token slice at lane offsets
+    `start` [B] with `n_valid` [B] real tokens: (pos, page, offset,
+    valid), all [B, C]."""
+    pos = start[:, None] + jnp.arange(chunk, dtype=start.dtype)[None, :]
+    valid = jnp.arange(chunk)[None, :] < n_valid[:, None]
+    page = (pos // page_tokens).astype(jnp.int32)
+    offset = (pos % page_tokens).astype(jnp.int32)
+    return pos, page, offset, valid
+
+
+def dense_prefill_chunk(params, cfg: ModelConfig, cache: PagedKVCache,
+                        tokens: jax.Array, start: jax.Array,
+                        n_valid: jax.Array
+                        ) -> Tuple[jax.Array, PagedKVCache]:
+    """Consume a [B, C] prompt slice directly into the paged cache.
+
+    Token j of lane b sits at absolute position start[b] + j and is
+    real while j < n_valid[b] (the rest of the slice is padding and is
+    neither written nor trusted). K/V pages are written at an offset
+    under static placement — no batch-1 side cache, no per-length
+    compiles: C is the only traced shape, lane offsets are data.
+    Returns (logits [B, C, V], updated cache); the logits at slice
+    index n_valid-1 are those of the last consumed prompt position, so
+    the first output token can be sampled on device at the step where
+    prefill crosses prompt_len.
+
+    Bitwise invariant (pinned by tests/test_chunked_prefill.py): for
+    the valid positions this reproduces `dense_forward` exactly, at ANY
+    chunk budget — per-position ops are shape-invariant and
+    `prefix_chunk_attention` sees the identical visible prefix.
+    """
+    C = tokens.shape[1]
+    T = cache.k_hbm.shape[3]
+    pos, page, offset, valid = chunk_coords(T, C, start, n_valid)
+    h = embed_tokens(params, cfg, tokens)
+
+    def body(carry, xs):
+        lp, kh, vh, ke, ve = xs
+        hcur, pools = prefill_chunk_attn(carry, lp, cfg, (kh, vh, ke, ve),
+                                         pos, page, offset, valid)
+        hcur = dense_mlp_block(hcur, lp, cfg)
+        return hcur, pools
+
+    xs = (params["layers"], cache.k_hbm, cache.v_hbm, cache.k_host,
+          cache.v_host)
+    h, (kh, vh, ke, ve) = jax.lax.scan(body, h, xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, cfg, h)
+    import dataclasses as dc
+    cache = dc.replace(cache, k_hbm=kh, v_hbm=vh, k_host=ke, v_host=ve)
+    cache = allocate_prompt_pages(cache, pos, valid, n_valid)
+    return logits, cache
 
 
 # ---------------------------------------------------------------------------

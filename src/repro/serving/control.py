@@ -166,6 +166,28 @@ def plan_migrations(cache: PagedKVCache, *, budget: int,
 # change traced shapes (zero retraces across the request stream).
 # --------------------------------------------------------------------------
 
+def lane_modes(active: jax.Array, prefilled: jax.Array,
+               prompt_len: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-lane mode flags for a MIXED prefill+decode serve step.
+
+    Returns (prefilling, decoding), disjoint bool [B]: a live lane
+    prefills until its prompt is fully consumed, then decodes. The
+    split is computed on device from the chunk carry, so a lane flips
+    from prefill to decode mid-chunk without any host involvement —
+    and it gates the whole control plane: the decode plane's write-slot
+    choice / Quest masking / sampling apply to decoding lanes (the
+    decode plane still RUNS every lane — `lane_merge` discards the
+    others bitwise), while `plan_migrations(active=decoding)` keeps the
+    migration planner off half-prefilled lanes so chunked prefill lands
+    exactly the Static Placement that `prefill_cache` would (the
+    bitwise-parity anchor). Half-filled prefill pages stay
+    placement-visible throughout: `allocate_prompt_pages` registers
+    them in the owner maps, so `occupancy` telemetry and the next
+    step's write-slot choice count them as resident.
+    """
+    prefilling = active & (prefilled < prompt_len)
+    return prefilling, active & ~prefilling
+
 def _lane_bcast(active: jax.Array, ndim: int, axis: int) -> jax.Array:
     """Reshape a [B] lane mask to broadcast at `axis` of an ndim array."""
     shape = [1] * ndim
@@ -214,9 +236,12 @@ def release_lanes(cache: PagedKVCache, lanes: jax.Array) -> PagedKVCache:
 
 def insert_lane(cache: PagedKVCache, lane_cache: PagedKVCache,
                 lane: jax.Array) -> PagedKVCache:
-    """Bind a freshly prefilled batch-1 cache to lane `lane` (int32
-    scalar) of the batched cache — the admission path. One compile for
-    all lanes: the lane index is data, not shape."""
+    """Bind a prefilled batch-1 cache to lane `lane` (int32 scalar) of
+    the batched cache. One compile for all lanes: the lane index is
+    data, not shape. No longer on the serve admission path (chunked
+    prefill writes pages in place — PR 3); kept for the
+    eager-admission baseline in benchmarks/perf_engine.py and as the
+    building block for future recurrent/hybrid-state lane insertion."""
     B = cache.length.shape[0]
     onehot = jnp.arange(B) == lane
 

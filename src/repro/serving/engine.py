@@ -26,13 +26,24 @@ bitwise identical and their byte accounting matches exactly:
                                  cache donated; the host reads back one
                                  [stride, 4] stats array per chunk.
   serve  `serve(requests)`     — the headline API: continuous batching
-                                 over the same fused chunks with
-                                 per-slot active masks, on-device
-                                 sampling (temperature/top-k/top-p,
-                                 greedy at temperature 0) and per-slot
-                                 EOS/budget stop conditions; admission,
+                                 over the same fused chunks, where each
+                                 step is a MIXED prefill+decode step:
+                                 decoding lanes emit one sampled token
+                                 (temperature/top-k/top-p, greedy at
+                                 temperature 0) while prefilling lanes
+                                 consume a `prefill_chunk`-token slice
+                                 of their prompt, writing pages
+                                 directly into their lane of the
+                                 shared cache at an offset. The first
+                                 output token is sampled ON DEVICE at
+                                 the step prefill crosses prompt_len
+                                 (TTFT is a device event); admission,
                                  completion and page reclaim happen at
-                                 chunk boundaries without retracing.
+                                 chunk boundaries without retracing —
+                                 ONE executable for the whole stream,
+                                 whatever the prompt-length mix.
+                                 Returns a `ServeReport` (completed
+                                 requests + TTFT/TPOT percentiles).
 
 Engine policies: "static" (never migrate) and "importance" (cost-aware
 hysteresis on the attention-mass EMA — our deployable beyond-paper
@@ -42,6 +53,7 @@ policy).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -51,10 +63,12 @@ import numpy as np
 from repro.core.latency_model import StepTraffic, step_latency
 from repro.core.tiers import MemorySystemSpec, TPU_V5E
 from repro.kvcache.migrate import apply_migrations
-from repro.kvcache.paged import PagedKVCache, init_cache, prefill_cache
+from repro.kvcache.paged import PagedKVCache, abstract_cache, init_cache
 from repro.models.model import Model
 from repro.serving import control
-from repro.serving.sampling import SamplingConfig, make_sampler, split_lanes
+from repro.serving.sampling import (
+    SamplingConfig, lane_key, make_sampler, split_lanes,
+)
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 
@@ -72,6 +86,12 @@ class EngineConfig:
     #: fused-mode scan length: decode steps run on device between
     #: telemetry readbacks (1 = eager cadence, larger = fewer syncs)
     telemetry_stride: int = 32
+    #: chunked-prefill token budget: prompt tokens each PREFILLING lane
+    #: consumes per mixed serve step. A static shape — lane index and
+    #: prompt offset are data — so one serve-chunk executable covers
+    #: every prompt length; chunking is bitwise-invisible (any budget
+    #: reproduces the whole-prompt prefill exactly).
+    prefill_chunk: int = 32
     #: stop token for `serve` (None = budget-only completion)
     eos_id: Optional[int] = None
 
@@ -84,6 +104,48 @@ class StepStats:
     m_in: float
     m_out: float
     hbm_hit_rate: float
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """`serve()`'s return value: the completed requests plus
+    request-level latency percentiles (seconds) — TTFT measured from
+    `submitted_at` to the boundary where the on-device first token is
+    read back, TPOT as decode seconds per token after the first.
+    Sequence-like over `completed`, so `for r in report` / `report[0]`
+    / `len(report)` keep working at PR 2 call sites."""
+    completed: List[Request]
+    ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
+    tpot: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def build(completed: List[Request]) -> "ServeReport":
+        def pct(vals):
+            if not vals:
+                return {}
+            v = np.asarray(vals, np.float64)
+            return {"mean": float(v.mean()),
+                    "p50": float(np.percentile(v, 50)),
+                    "p95": float(np.percentile(v, 95))}
+
+        ttfts = [r.first_token_at - r.submitted_at for r in completed
+                 if r.first_token_at is not None]
+        tpots = [(r.finished_at - r.first_token_at)
+                 / (len(r.output) - 1)
+                 for r in completed
+                 if r.first_token_at is not None
+                 and r.finished_at is not None and len(r.output) > 1]
+        return ServeReport(completed=list(completed), ttft=pct(ttfts),
+                           tpot=pct(tpots))
+
+    def __iter__(self):
+        return iter(self.completed)
+
+    def __len__(self) -> int:
+        return len(self.completed)
+
+    def __getitem__(self, i):
+        return self.completed[i]
 
 
 def _get_cache(state) -> PagedKVCache:
@@ -195,40 +257,122 @@ class ServingEngine:
                 body, (state, token), None, length=n)
             return state, token, toks, stats
 
-        def serve_chunk_fn(params, state, token, active, remaining, keys):
-            """Sampled, per-slot-masked fused decode for one chunk.
+        serveable = fam in ("dense", "moe")
+        if serveable:
+            C = max(1, cfg.prefill_chunk)
+            S_cap = geo.max_tokens
+            B = geo.batch
+            pf_logits_sds, _ = jax.eval_shape(
+                lambda c, t, s, n: model.prefill_chunk(self.params, c,
+                                                       t, s, n),
+                abstract_cache(geo),
+                jax.ShapeDtypeStruct((B, C), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32))
 
-            Carries per-slot (token, active, remaining budget, PRNG key)
-            through `lax.scan`; emits -1 for inactive lanes. Completion
-            (EOS / budget) flips the lane's active bit on device; the
-            host reclaims and re-admits at the chunk boundary.
+        def serve_chunk_fn(params, state, token, active, remaining, keys,
+                           prefilled, prompt_len, prompt_buf):
+            """One fused chunk of MIXED prefill+decode steps.
+
+            Carries per-slot (token, active, remaining budget, PRNG key,
+            prompt progress) through `lax.scan`; per step the lane-mode
+            split (`control.lane_modes`) is derived on device, decoding
+            lanes run the decode plane (emitting into `emitted`, -1
+            elsewhere) and prefilling lanes consume a C-token prompt
+            slice (`model.prefill_chunk` — skipped via `lax.cond` when
+            no lane is prefilling). The step where a lane's prefill
+            crosses prompt_len samples its FIRST token from the last
+            prompt position's logits (reported via `first`, not
+            `emitted`, so telemetry still prices decode steps only) and
+            the lane starts decoding the next step — all without host
+            involvement. Completion (EOS / budget, including instant
+            budget-1/EOS at the crossing) flips the lane's active bit
+            on device; the host reclaims and re-admits at the chunk
+            boundary.
             """
             def body(carry, _):
-                st, tok, act, rem, ks = carry
-                logits, st, stats = step_fn(params, st, tok, act)
+                st, tok, act, rem, ks, prog = carry
+                pf, dec = control.lane_modes(act, prog, prompt_len)
+
+                # decode plane: skipped (lax.cond) on pure-prefill
+                # steps — step_fn with dec all-False is a bitwise
+                # no-op on the cache (lane_merge freezes every lane,
+                # the planner plans nothing) and its stats row is
+                # filtered at the boundary, so skipping it only saves
+                # the dead forward
+                def run_dec(args):
+                    return step_fn(params, args[0], args[1], dec)
+
+                def skip_dec(args):
+                    occ = control.occupancy(_get_cache(args[0]))
+                    vocab = pf_logits_sds.shape[-1]
+                    return (jnp.zeros((B, vocab), pf_logits_sds.dtype),
+                            args[0],
+                            jnp.concatenate(
+                                [occ, jnp.zeros((2,), jnp.int32)]))
+
+                logits, st, stats = jax.lax.cond(dec.any(), run_dec,
+                                                 skip_dec, (st, tok))
                 ks, sub = split_lanes(ks)
                 nxt = sampler(logits, sub)
-                rem = rem - act.astype(rem.dtype)
-                fin = act & (rem <= 0)
+                rem = rem - dec.astype(rem.dtype)
+                fin = dec & (rem <= 0)
                 if eos is not None:
-                    fin = fin | (act & (nxt == eos))
-                emitted = jnp.where(act, nxt, -1)
-                tok = jnp.where(act, nxt, tok)
+                    fin = fin | (dec & (nxt == eos))
+                emitted = jnp.where(dec, nxt, -1)
+                tok = jnp.where(dec, nxt, tok)
                 act = act & ~fin
-                return (st, tok, act, rem, ks), (emitted, stats)
 
-            carry = (state, token, active, remaining, keys)
-            carry, (emitted, stats) = jax.lax.scan(
+                # prefill plane: a C-token slice per prefilling lane,
+                # written straight into its pages at offset `prog`
+                n_val = jnp.where(pf, jnp.clip(prompt_len - prog, 0, C),
+                                  0).astype(jnp.int32)
+                idx = jnp.clip(prog[:, None] + jnp.arange(C), 0,
+                               S_cap - 1)
+                sl_toks = jnp.take_along_axis(prompt_buf, idx, axis=1)
+                cache = _get_cache(st)
+
+                def run_pf(args):
+                    c, t, s, n = args
+                    return model.prefill_chunk(params, c, t, s, n)
+
+                def skip_pf(args):
+                    return (jnp.zeros(pf_logits_sds.shape,
+                                      pf_logits_sds.dtype), args[0])
+
+                logits_c, cache = jax.lax.cond(
+                    pf.any(), run_pf, skip_pf,
+                    (cache, sl_toks, prog, n_val))
+                st = _set_cache(st, cache)
+                prog = prog + n_val
+                crossed = pf & (prog >= prompt_len)
+                last = jnp.clip(n_val - 1, 0, C - 1)
+                logits1 = jnp.take_along_axis(
+                    logits_c, last[:, None, None], axis=1)[:, 0]
+                tok0 = sampler(logits1, sub)
+                first = jnp.where(crossed, tok0, -1)
+                tok = jnp.where(crossed, tok0, tok)
+                rem = rem - crossed.astype(rem.dtype)
+                fin0 = crossed & (rem <= 0)
+                if eos is not None:
+                    fin0 = fin0 | (crossed & (tok0 == eos))
+                act = act & ~fin0
+                return (st, tok, act, rem, ks, prog), (emitted, first,
+                                                       stats)
+
+            carry = (state, token, active, remaining, keys, prefilled)
+            carry, (emitted, first, stats) = jax.lax.scan(
                 body, carry, None, length=max(1, cfg.telemetry_stride))
-            state, token, active, remaining, keys = carry
-            return state, token, active, remaining, keys, emitted, stats
+            state, token, active, remaining, keys, prefilled = carry
+            return (state, token, active, remaining, keys, prefilled,
+                    emitted, first, stats)
 
         self._step_jit = jax.jit(step_fn, donate_argnums=(1,))
         self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1,))
         self._gen_jit = jax.jit(gen_fn, donate_argnums=(1,),
                                 static_argnums=(3,))
-        self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=(1,))
-        self._insert_jit = jax.jit(control.insert_lane, donate_argnums=(0,))
+        if serveable:
+            self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=(1,))
         self._release_jit = jax.jit(control.release_lanes,
                                     donate_argnums=(0,))
 
@@ -284,28 +428,39 @@ class ServingEngine:
               num_slots: Optional[int] = None,
               sampling: Optional[SamplingConfig] = None,
               seed: int = 0, total_pages: Optional[int] = None,
-              max_skips: int = 8) -> List[Request]:
+              max_skips: int = 8) -> ServeReport:
         """Drive a request stream end-to-end through the fused hot path.
 
-        A fixed batch of `num_slots` cache lanes decodes as ONE jitted
-        `lax.scan` chunk per `telemetry_stride` steps; per-slot active
-        masks keep finished/empty lanes bitwise-frozen inside the chunk,
-        so admissions and completions (at chunk boundaries) never change
-        traced shapes — zero retraces across the whole stream.
+        A fixed batch of `num_slots` cache lanes runs as ONE jitted
+        `lax.scan` chunk per `telemetry_stride` steps of MIXED
+        prefill+decode steps: decoding lanes emit one sampled token
+        while prefilling lanes consume a `prefill_chunk`-token slice of
+        their prompt, written straight into their lane's pages at an
+        offset (`Model.prefill_chunk`). The per-lane mode flip —
+        including sampling the request's first token at the step
+        prefill crosses prompt_len — happens on device, so admissions,
+        mode transitions and completions never change traced shapes:
+        ONE serve-chunk executable across the whole stream, whatever
+        the prompt-length mix (no per-length admission compiles, no
+        whole-batch stall while a prompt prefills).
 
-        Per chunk boundary the host: reads back emitted tokens + the
-        per-slot (active, remaining) view, completes finished requests
-        (EOS or budget, decided ON DEVICE), releases their pages into
-        the planner's free pool (`control.release_lanes`), and admits
-        queued requests (`ContinuousBatcher.admit` -> per-request
-        prefill -> `control.insert_lane`).
+        Per chunk boundary the host: reads back emitted + first tokens
+        and the per-slot (active, remaining, prefilled) carry, completes
+        finished requests (EOS or budget, decided ON DEVICE) with one
+        masked `control.release_lanes` call covering every completion
+        in the chunk, and admits queued requests — pure bookkeeping
+        (`_admit_lane`): a prompt row, counters, and a sampling key.
 
         Sampling (temperature / top-k / top-p) runs inside the fused
         loop with per-slot PRNG keys derived from (`seed`, request id);
         the default `SamplingConfig()` is greedy, and a single
-        full-length request then reproduces `generate` bitwise.
+        full-length request then reproduces `generate` bitwise — as
+        does chunked prefill at ANY budget vs the whole-prompt forward
+        (tests/test_chunked_prefill.py).
 
-        Returns the completed requests (token ids in `req.output`).
+        Returns a `ServeReport`: completed requests (token ids in
+        `req.output`) plus TTFT/TPOT percentiles from the per-request
+        wall-clock stamps.
         """
         cfg = self.cfg
         fam = self.model.cfg.family
@@ -315,7 +470,7 @@ class ServingEngine:
                 f"family {fam!r} needs prefill extras or recurrent-state "
                 f"lane insertion")
         if not requests:
-            return []
+            return ServeReport(completed=[])
         B = num_slots if num_slots is not None else min(len(requests), 4)
         geo = self.model.cache_geometry(
             B, cfg.max_context, hbm_fraction=cfg.hbm_fraction)
@@ -344,108 +499,116 @@ class ServingEngine:
         for r in requests:
             batcher.submit(r)
 
-        root = jax.random.PRNGKey(seed)
-        keys = jax.random.split(root, B)
-        token = np.zeros((B,), np.int32)
         stride = max(1, cfg.telemetry_stride)
+        root = jax.random.PRNGKey(seed)
+        # host-side lane state poked by _admit_lane; everything the
+        # device needs is re-uploaded per chunk (small [B]-vectors plus
+        # the [B, max_tokens] prompt buffer)
+        hs = {
+            "root": root,
+            "prompt_buf": np.zeros((B, geo.max_tokens), np.int32),
+            "token": np.zeros((B,), np.int32),
+            "keys": np.array(jax.random.split(root, B)),
+        }
         live: Dict[int, Request] = {}          # lane -> request
 
         def admit():
-            """Admit until no progress: an admission that completes at
-            its first token (budget 1 / instant EOS) frees its slot for
-            the next queued request within the same boundary."""
-            nonlocal keys
+            """Admit until no progress (an admission the eager-baseline
+            subclass completes instantly frees its slot for the next
+            queued request within the same boundary)."""
             while True:
                 admitted = batcher.admit()
                 if not admitted:
                     return
                 for req in admitted:
-                    lane = req.lane
-                    rkey = jax.random.fold_in(root, req.rid)
-                    rkey, sub = jax.random.split(rkey)
-                    logits1, lane_cache = self._prefill_lane(req)
-                    self.state = self._insert_jit(self.state, lane_cache,
-                                                  jnp.int32(lane))
-                    # first token comes from the prefill logits
-                    tok0 = int(self._sampler(logits1[None], sub[None])[0])
-                    req.output.append(tok0)
-                    req.generated = 1
-                    keys = keys.at[lane].set(rkey)
-                    done = (req.generated >= req.max_new_tokens
-                            or (cfg.eos_id is not None
-                                and tok0 == cfg.eos_id))
-                    if done:
-                        self.state = self._release_jit(
-                            self.state, jnp.asarray(np.arange(B) == lane))
-                        batcher.complete(req)
-                    else:
-                        live[lane] = req
-                        token[lane] = tok0
-
-        def carry_view():
-            """The batcher's device-facing view IS the chunk carry: at a
-            boundary `generated` is synced, so remaining/active match
-            the device bitwise."""
-            view = batcher.device_view()
-            return view.active, view.remaining
+                    self._admit_lane(req, hs)
+                    if req.lane >= 0:
+                        live[req.lane] = req
 
         admit()
-        active, remaining = carry_view()
+        view = batcher.device_view()
         while batcher.has_work:
-            if not active.any():
+            if not view.active.any():
                 stuck = batcher.queue[0]
                 raise RuntimeError(
                     f"request {stuck.rid} needs {stuck.pages_needed} pages"
                     f" but the pool has only {batcher.total_pages}")
-            (self.state, tok_d, act_d, _rem_d, keys, emitted,
-             stats) = self._serve_jit(
-                self.params, self.state, jnp.asarray(token),
-                jnp.asarray(active), jnp.asarray(remaining), keys)
+            t0 = time.time()
+            (self.state, tok_d, act_d, _rem_d, keys_d, prog_d, emitted,
+             first, stats) = self._serve_jit(
+                self.params, self.state, jnp.asarray(hs["token"]),
+                jnp.asarray(view.active), jnp.asarray(view.remaining),
+                jnp.asarray(hs["keys"]), jnp.asarray(view.prefilled),
+                jnp.asarray(view.prompt_len),
+                jnp.asarray(hs["prompt_buf"]))
             emitted = np.asarray(emitted)               # [stride, B]
-            token = np.array(tok_d)                     # writable copy:
-            done_d = ~np.asarray(act_d)                 # admit() pokes it
-            # telemetry: only steps where at least one lane decoded
+            first = np.asarray(first)                   # [stride, B]
+            hs["token"] = np.array(tok_d)               # writable copies:
+            hs["keys"] = np.array(keys_d)               # admit() pokes them
+            prog = np.asarray(prog_d)
+            done_d = ~np.asarray(act_d)
+            # telemetry: only steps where at least one lane DECODED —
+            # prefill-only steps (first tokens included) are charged to
+            # the prefill stage, matching the simulator's convention
             self._record(np.asarray(stats)[emitted.max(axis=1) >= 0])
+            # per-step wall-clock stamps: the chunk's device events are
+            # observed at the boundary, so spread its wall time evenly
+            # over the stride — TTFT/TPOT then resolve WITHIN a chunk
+            # (a request finishing in one chunk still gets a per-token
+            # latency, not a ~0 boundary-to-boundary delta)
+            span = time.time() - t0
+
+            def stamp(row):
+                return t0 + (row + 1) / stride * span
+
             release = np.zeros((B,), bool)
             for lane, req in list(live.items()):
-                toks = emitted[:, lane]
-                toks = toks[toks >= 0]
-                req.output.extend(int(t) for t in toks)
-                req.generated += len(toks)
+                # a lane never emits both in one step: `first` at the
+                # crossing step, `emitted` at decode steps after it
+                rows = np.where(first[:, lane] >= 0, first[:, lane],
+                                emitted[:, lane])
+                got = np.nonzero(rows >= 0)[0]
+                if req.first_token_at is None and first[:, lane].max() >= 0:
+                    req.first_token_at = stamp(
+                        int(np.argmax(first[:, lane] >= 0)))
+                    req.phase = "decoding"
+                req.output.extend(int(rows[s]) for s in got)
+                req.generated += len(got)
+                req.prefilled = int(min(prog[lane], req.prompt_len))
                 if done_d[lane]:      # EOS/budget decided on device
                     del live[lane]
                     release[lane] = True
                     batcher.complete(req)
+                    if got.size:
+                        req.finished_at = stamp(int(got[-1]))
             if release.any():
+                # ONE masked release per boundary covers every
+                # completion in the chunk — including instant
+                # budget-1/EOS crossings, which used to cost a separate
+                # device call each at admission
                 self.state = self._release_jit(self.state,
                                                jnp.asarray(release))
             batcher.step_idx += stride
             admit()
-            active, remaining = carry_view()
-        return batcher.completed
+            view = batcher.device_view()
+        return ServeReport.build(batcher.completed)
 
-    def _prefill_lane(self, req: Request):
-        """Prefill one request into a batch-1 cache lane.
-
-        The prompt is right-padded to a page boundary so admission
-        compiles once per page-rounded prompt length: under causal
-        attention the pads influence nothing at positions < prompt_len,
-        the padded tail of the last page sits behind the page's valid
-        count (invisible to the kernel), and decode overwrites it as
-        the sequence grows. Returns (last-prompt-position logits [V],
-        batch-1 PagedKVCache).
-        """
-        geo = self.geo
-        S = req.prompt_len
-        pad = (-S) % geo.page_tokens
-        prompt = jnp.asarray(np.asarray(req.prompt),
-                             jnp.int32).reshape(1, -1)
-        if pad:
-            prompt = jnp.pad(prompt, ((0, 0), (0, pad)))
-        geo1 = dataclasses.replace(geo, batch=1)
-        logits, (k, v) = self.model.forward(self.params, prompt,
-                                            collect_kv=True)
-        return logits[0, S - 1], prefill_cache(geo1, k, v, S)
+    def _admit_lane(self, req: Request, hs: Dict) -> None:
+        """Bind an admitted request to its cache lane for CHUNKED
+        prefill: pure host bookkeeping — the prompt row, the progress
+        counters (via `req.prefilled`, exported by `device_view`), and
+        the lane's sampling key. No device compute, no model forward,
+        no per-prompt-length compiles; the prompt starts flowing into
+        the lane's pages at the next chunk's mixed steps. (The
+        eager-admission baseline in benchmarks/perf_engine.py overrides
+        this with the PR 2 whole-prompt forward + `insert_lane`.)"""
+        lane = req.lane
+        prompt = np.asarray(req.prompt).astype(np.int32).ravel()
+        hs["prompt_buf"][lane, :] = 0
+        hs["prompt_buf"][lane, :prompt.size] = prompt
+        hs["token"][lane] = 0
+        hs["keys"][lane] = np.asarray(
+            lane_key(hs["root"], jnp.int32(req.rid)))
 
     # ------------------------------------------------------------------ #
     # telemetry (host side, Eq. (1)-(5) pricing)

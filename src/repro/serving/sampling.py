@@ -10,9 +10,14 @@ plain argmax — bitwise identical to `ServingEngine.generate`'s greedy
 path, which is what the single-request parity tests pin.
 
 Per-slot PRNG keys are threaded through `lax.scan` by the caller (see
-`ServingEngine.serve`): each batch lane samples with its own key, so a
-request's tokens depend only on (its key, its logits) — reproducible
-regardless of which other requests share the batch.
+`ServingEngine.serve`): each batch lane samples with its own key chain
+rooted at `lane_key(root, rid)`, so a request's tokens depend only on
+(its key, its logits) — reproducible regardless of which other
+requests share the batch. The chain advances once per fused step
+(`split_lanes`); a lane consumes its step subkey either for a decode
+sample or — at the step where chunked prefill crosses prompt_len — for
+the request's FIRST token, which is sampled on device from the last
+prompt position's logits (TTFT is a device event, not a host one).
 """
 
 from __future__ import annotations
@@ -22,6 +27,14 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+
+def lane_key(root: jax.Array, rid) -> jax.Array:
+    """Root of a request's per-lane sampling chain: derived from
+    (serve seed, request id) only, never from slot index or batch
+    company. rid may be a traced int32 scalar — one compile serves
+    every request."""
+    return jax.random.fold_in(root, rid)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,6 +12,19 @@ batch of live slots over the engine's paged cache:
     batching, Sarathi/vLLM-style at step granularity);
   * fairness — FIFO with a starvation bound (max_skips).
 
+Each request walks a lane state machine, mirrored on device by the
+mixed prefill+decode serve loop (PR 3):
+
+  queued -> prefilling -> decoding -> done
+
+Admission binds a lane and starts CHUNKED prefill: the lane consumes a
+fixed token-budget slice of its prompt per fused step (`prefilled`
+tracks progress) while other lanes decode; the first output token is
+sampled on device at the step prefill crosses `prompt_len`
+("decoding"), and EOS/budget completion frees the lane ("done").
+Wall-clock stamps (`submitted_at` / `first_token_at` / `finished_at`)
+feed the TTFT/TPOT percentiles in `ServeReport`.
+
 The scheduler is pure control plane: it never touches arrays. Two ways
 to drive it:
 
@@ -33,6 +46,7 @@ and tests/test_serve_loop.py.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -58,6 +72,15 @@ class Request:
     lane: int = -1
     #: generated token ids (filled by the serving engine)
     output: List[int] = dataclasses.field(default_factory=list)
+    #: lane state machine: queued -> prefilling -> decoding -> done
+    phase: str = "queued"
+    #: prompt tokens already consumed by chunked prefill
+    prefilled: int = 0
+    #: wall-clock request-latency stamps (TTFT = first_token_at -
+    #: submitted_at; TPOT from first_token_at/finished_at/generated)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
 
     def __post_init__(self):
         if self.prompt is not None and not self.prompt_len:
@@ -80,11 +103,16 @@ class SlotState:
 
 @dataclasses.dataclass
 class DeviceView:
-    """Device-facing snapshot of the batch: what the fused decode loop
-    needs to know, as arrays (see ServingEngine.serve)."""
+    """Device-facing snapshot of the batch: what the fused mixed
+    prefill+decode loop needs to know, as arrays (see
+    ServingEngine.serve). The per-lane mode (prefilling vs decoding) is
+    derived ON DEVICE as `prefilled < prompt_len`, so the view is also
+    the chunk carry."""
     active: np.ndarray       # [num_slots] bool — slot has a live request
     remaining: np.ndarray    # [num_slots] int32 — token budget left
     rids: np.ndarray         # [num_slots] int32 — request id, -1 if free
+    prompt_len: np.ndarray   # [num_slots] int32 — prompt tokens, 0 if free
+    prefilled: np.ndarray    # [num_slots] int32 — prompt progress
     lane_of: Dict[int, int]  # rid -> cache lane (page-table binding)
 
 
@@ -112,6 +140,11 @@ class ContinuousBatcher:
         req.generated = 0
         req.lane = -1
         req.output = []
+        req.phase = "queued"
+        req.prefilled = 0
+        req.submitted_at = time.time()
+        req.first_token_at = None
+        req.finished_at = None
         self.queue.append(req)
 
     def admit(self) -> List[Request]:
@@ -131,6 +164,7 @@ class ContinuousBatcher:
                 self.slots[lane].request = req
                 req.lane = lane
                 req.started_step = self.step_idx
+                req.phase = "prefilling"
                 self.free_pages -= req.pages_needed
                 admitted.append(req)
             else:
@@ -147,6 +181,8 @@ class ContinuousBatcher:
         self.slots[req.lane].request = None
         self.free_pages += req.pages_needed
         req.finished_step = self.step_idx
+        req.finished_at = time.time()
+        req.phase = "done"
         req.lane = -1
         self.completed.append(req)
 
@@ -156,6 +192,8 @@ class ContinuousBatcher:
         active = np.zeros((n,), bool)
         remaining = np.zeros((n,), np.int32)
         rids = np.full((n,), -1, np.int32)
+        prompt_len = np.zeros((n,), np.int32)
+        prefilled = np.zeros((n,), np.int32)
         lane_of: Dict[int, int] = {}
         for i, s in enumerate(self.slots):
             r = s.request
@@ -164,8 +202,11 @@ class ContinuousBatcher:
             active[i] = True
             remaining[i] = r.max_new_tokens - r.generated
             rids[i] = r.rid
+            prompt_len[i] = r.prompt_len
+            prefilled[i] = r.prefilled
             lane_of[r.rid] = i
         return DeviceView(active=active, remaining=remaining, rids=rids,
+                          prompt_len=prompt_len, prefilled=prefilled,
                           lane_of=lane_of)
 
     @property

@@ -1,0 +1,376 @@
+"""Chunked prefill inside the fused serve loop (PR 3).
+
+Pins the tentpole invariants:
+
+  * chunked prefill at ANY token budget is bitwise-identical to the
+    whole-prompt prefill — logits, pool contents, page tables — across
+    prompt lengths that straddle page boundaries;
+  * serve() with chunked admission still reproduces `generate` bitwise
+    (tokens, StepStats, pool contents) for a single greedy request;
+  * ONE serve-chunk executable across a stream spanning >= 3 distinct
+    page-rounded prompt lengths (admission compiles nothing);
+  * admission fairness / starvation bounds hold while long prompts
+    prefill across several chunks (hypothesis-optional property plus
+    always-run smoke cases);
+  * the lane state machine (queued -> prefilling -> decoding -> done)
+    and the ServeReport TTFT/TPOT stamps.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro import configs
+from repro.core.tiers import GH200
+from repro.kvcache.paged import (
+    init_cache, prefill_cache, write_token_layer, write_tokens_layer,
+)
+from repro.models.model import Model
+from repro.serving.engine import EngineConfig, ServeReport, ServingEngine
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.get_smoke("internlm2-1.8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.key(0))
+
+
+def _cfg(stride=4, prefill_chunk=16, **kw):
+    return EngineConfig(max_context=128, hbm_fraction=0.25,
+                        policy="importance", attention_sparsity=0.0,
+                        spec=GH200, promote_thresh=0.005,
+                        telemetry_stride=stride,
+                        prefill_chunk=prefill_chunk, **kw)
+
+
+def _pools(cache):
+    return (cache.k_hbm, cache.v_hbm, cache.k_host, cache.v_host)
+
+
+class TestChunkedForwardParity:
+    """Model.prefill_chunk vs the whole-prompt forward, straight at the
+    model layer: same logits, same cache, any chunking."""
+
+    @pytest.mark.parametrize("S,C", [(15, 4), (17, 16), (33, 6)])
+    def test_matches_whole_prompt_prefill(self, dense_model, S, C):
+        model, params = dense_model
+        rng = np.random.default_rng(S)
+        prompt = rng.integers(0, model.cfg.vocab, (S,))
+        geo = model.cache_geometry(1, 128)
+        logits_full, (k, v) = model.forward(
+            params, jnp.asarray(prompt[None], jnp.int32), collect_kv=True)
+        ref = prefill_cache(geo, k, v, S)
+
+        pf = jax.jit(lambda c, t, s, n: model.prefill_chunk(params, c, t,
+                                                            s, n))
+        cache = init_cache(geo)
+        buf = np.zeros((1, geo.max_tokens), np.int32)
+        buf[0, :S] = prompt
+        prog, last = 0, None
+        while prog < S:
+            nv = min(C, S - prog)
+            idx = np.clip(prog + np.arange(C), 0, geo.max_tokens - 1)
+            lg, cache = pf(cache, jnp.asarray(buf[:, idx]),
+                           jnp.asarray([prog], jnp.int32),
+                           jnp.asarray([nv], jnp.int32))
+            last = lg[0, nv - 1]
+            prog += nv
+        np.testing.assert_array_equal(np.asarray(last),
+                                      np.asarray(logits_full[0, S - 1]))
+        for got, want in zip(jax.tree.leaves(cache), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+
+    def test_chunk_straddles_page_and_tier_boundaries(self, dense_model):
+        """A single slice crossing a page boundary writes both pages;
+        one crossing the HBM/host pool boundary writes both pools."""
+        model, params = dense_model
+        rng = np.random.default_rng(0)
+        geo = dataclasses.replace(model.cache_geometry(1, 128),
+                                  hbm_pages=1, host_pages=3)
+        S = 40                                # pages 0..2, page 1+ on host
+        prompt = rng.integers(0, model.cfg.vocab, (S,))
+        pf = jax.jit(lambda c, t, s, n: model.prefill_chunk(params, c, t,
+                                                            s, n))
+        cache = init_cache(geo)
+        buf = np.zeros((1, geo.max_tokens), np.int32)
+        buf[0, :S] = prompt
+        for prog in range(0, S, 20):          # 20-token slices: 16+4
+            nv = min(20, S - prog)
+            idx = np.clip(prog + np.arange(20), 0, geo.max_tokens - 1)
+            _, cache = pf(cache, jnp.asarray(buf[:, idx]),
+                          jnp.asarray([prog], jnp.int32),
+                          jnp.asarray([nv], jnp.int32))
+        assert int(cache.length[0]) == S
+        np.testing.assert_array_equal(np.asarray(cache.hbm_owner[0, 0]),
+                                      [0])
+        np.testing.assert_array_equal(np.asarray(cache.host_owner[0, 0]),
+                                      [1, 2, -1])
+        # partial page 2 (8 tokens) is placement-visible
+        _, _, _, ev = cache.tier_lists(layer=0)
+        np.testing.assert_array_equal(np.asarray(ev[0]), [16, 8, 0])
+
+
+class TestServeBudgetInvariance:
+    """serve() outputs and final cache contents are bitwise-identical
+    at every prefill budget, including whole-prompt-in-one-step."""
+
+    def _serve(self, model, params, budget, reqs):
+        eng = ServingEngine(model, params, _cfg(prefill_chunk=budget))
+        report = eng.serve(reqs, num_slots=len(reqs), seed=7)
+        outs = {r.rid: list(r.output) for r in report}
+        return outs, eng._cache
+
+    @pytest.mark.parametrize("budget", [3, 16, 24])
+    def test_budget_bitwise_invariant(self, dense_model, budget):
+        model, params = dense_model
+        rng = np.random.default_rng(3)
+        # page-straddling prompt lengths: 15/17/33 over 16-token pages;
+        # submit() resets per-run state, so the same Request objects
+        # drive both serves
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab, (ln,)),
+                        max_new_tokens=5)
+                for i, ln in enumerate((15, 17, 33))]
+        outs, cache = self._serve(model, params, budget, reqs)
+        # budget 512 >= any prompt: the whole prompt in one mixed step
+        ref_outs, ref_cache = self._serve(model, params, 512, reqs)
+        assert outs == ref_outs
+        for got, want in zip(jax.tree.leaves(cache),
+                             jax.tree.leaves(ref_cache)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+
+
+class TestServeGenerateParity:
+    """A single full-length greedy request through chunked-prefill
+    serve still reproduces prefill + fused `generate` bitwise."""
+
+    @pytest.mark.parametrize("budget,S", [(5, 32), (16, 21), (512, 32)])
+    def test_tokens_stats_pools_match_generate(self, dense_model, budget,
+                                               S):
+        model, params = dense_model
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, model.cfg.vocab, (S,))
+        n = 9
+
+        ref = ServingEngine(model, params, _cfg())
+        logits0 = ref.start(jnp.asarray(prompt[None], jnp.int32))
+        tok0 = jnp.argmax(logits0, -1).astype(jnp.int32)
+        toks = ref.generate(tok0, n - 1)
+        want = [int(tok0[0])] + [int(t) for t in np.asarray(toks)[:, 0]]
+
+        eng = ServingEngine(model, params, _cfg(prefill_chunk=budget))
+        report = eng.serve(
+            [Request(rid=0, prompt=prompt, max_new_tokens=n)],
+            num_slots=1)
+        assert report[0].output == want
+        assert eng.stats == ref.stats
+        # the write history (prompt pages + decode tokens + migrations)
+        # is bitwise the same program; release only clears the tables
+        for got, want_p in zip(_pools(eng._cache), _pools(ref._cache)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want_p))
+
+
+class TestMixedStreamRetraces:
+    def test_three_page_rounded_lengths_one_executable(self, dense_model):
+        """Prompts spanning >= 3 distinct page-rounded lengths (1..4
+        pages) serve through ONE executable: admission compiles
+        nothing, whatever lengths arrive."""
+        model, params = dense_model
+        rng = np.random.default_rng(5)
+        lengths = (16, 17, 40, 55, 33, 64)     # 1, 2, 3, 4, 3, 4 pages
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab, (ln,)),
+                        max_new_tokens=3 + (i % 3))
+                for i, ln in enumerate(lengths)]
+        eng = ServingEngine(model, params, _cfg(prefill_chunk=16))
+        report = eng.serve(reqs, num_slots=2, seed=1)
+        assert sorted(r.rid for r in report) == list(range(len(lengths)))
+        for r in report:
+            assert len(r.output) == r.max_new_tokens
+            assert r.prefilled == r.prompt_len
+            assert r.phase == "done"
+        assert eng._serve_jit._cache_size() == 1
+        assert eng.batcher.free_pages == eng.batcher.total_pages
+
+    def test_prefill_spans_chunks_while_others_decode(self, dense_model):
+        """A long prompt at a tiny budget prefills across several chunk
+        boundaries (progress is visible between them) while a short
+        request decodes — the serialization PR 2 had is gone."""
+        model, params = dense_model
+        rng = np.random.default_rng(6)
+        long = Request(rid=0,
+                       prompt=rng.integers(0, model.cfg.vocab, (64,)),
+                       max_new_tokens=2)
+        short = Request(rid=1,
+                        prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                        max_new_tokens=12)
+        eng = ServingEngine(model, params, _cfg(stride=4,
+                                                prefill_chunk=4))
+        report = eng.serve([long, short], num_slots=2, seed=0)
+        # 64 tokens / (4 per step * 4 steps per chunk) = 4 chunks of
+        # prefill; the short request decoded through those same chunks
+        # and finished before the long one
+        assert {r.rid for r in report} == {0, 1}
+        assert long.first_token_at > short.first_token_at
+        assert len(long.output) == 2 and len(short.output) == 12
+
+
+class TestAdmissionFairnessUnderPressure:
+    """Satellite: starvation bound under page pressure with mixed
+    prompt lengths — long prompts prefill across several chunks while
+    short ones queue."""
+
+    def _run(self, model, params, lengths, budgets, *, total_pages,
+             max_skips, num_slots=2, prefill_chunk=8):
+        reqs = [Request(rid=i, prompt=np.arange(ln) % model.cfg.vocab,
+                        max_new_tokens=b)
+                for i, (ln, b) in enumerate(zip(lengths, budgets))]
+        eng = ServingEngine(model, params,
+                            _cfg(stride=4, prefill_chunk=prefill_chunk))
+        report = eng.serve(reqs, num_slots=num_slots,
+                           total_pages=total_pages, max_skips=max_skips,
+                           seed=0)
+        return eng, report, reqs
+
+    def test_long_prefill_does_not_starve_queued_shorts(self,
+                                                        dense_model):
+        model, params = dense_model
+        # 80-token prompt = 6 pages incl. decode; pool of 8 pages keeps
+        # one short queued while the long one prefills for 20+ steps
+        lengths = (80, 16, 16, 16)
+        budgets = (4, 4, 4, 4)
+        eng, report, reqs = self._run(model, params, lengths, budgets,
+                                      total_pages=8, max_skips=1)
+        assert sorted(r.rid for r in report) == [0, 1, 2, 3]
+        for r in report:
+            assert len(r.output) == r.max_new_tokens
+        # the queued shorts were admitted only as pages freed — after
+        # the stream, accounting balances exactly
+        assert eng.batcher.free_pages == 8
+        assert max(r.started_step for r in reqs) > 0
+
+    def test_max_skips_still_bounds_leapfrogging(self, dense_model):
+        """While a long request holds pages in prefill, a second long
+        request at the queue head may be passed over at most max_skips
+        times per admission round (scheduler-level bound unchanged by
+        the mixed-step rework)."""
+        cb = ContinuousBatcher(num_slots=4, total_pages=6, max_skips=1)
+        cb.submit(Request(rid=0, prompt_len=64, max_new_tokens=16))  # 5p
+        cb.admit()
+        cb.submit(Request(rid=1, prompt_len=64, max_new_tokens=16))  # 5p
+        cb.submit(Request(rid=2, prompt_len=8, max_new_tokens=8))    # 1p
+        cb.submit(Request(rid=3, prompt_len=8, max_new_tokens=8))    # 1p
+        # rid=1 cannot fit (1 page free) and may be skipped once: only
+        # rid=2 leapfrogs, rid=3 stays FIFO-queued behind the bound
+        assert [r.rid for r in cb.admit()] == [2]
+        assert [r.rid for r in cb.queue] == [1, 3]
+
+    @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+    @settings(max_examples=5, deadline=None)
+    def test_property_streams_complete_and_balance(self, dense_model,
+                                                   seed):
+        model, params = dense_model
+        rng = np.random.default_rng(seed)
+        lengths = rng.integers(8, 72, size=4)
+        budgets = rng.integers(1, 8, size=4)
+        # a few discrete budgets only, so the property run compiles at
+        # most 3 serve-chunk executables across all examples
+        eng, report, _ = self._run(model, params, lengths, budgets,
+                                   total_pages=12, max_skips=2,
+                                   prefill_chunk=(4, 8, 16)[seed % 3])
+        assert sorted(r.rid for r in report) == [0, 1, 2, 3]
+        for r, b in zip(sorted(report, key=lambda r: r.rid), budgets):
+            assert len(r.output) == b
+        assert eng.batcher.free_pages == 12
+
+
+class TestServeReportAndPhases:
+    def test_report_percentiles_and_stamps(self, dense_model):
+        model, params = dense_model
+        rng = np.random.default_rng(9)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab, (24,)),
+                        max_new_tokens=4) for i in range(3)]
+        eng = ServingEngine(model, params, _cfg())
+        report = eng.serve(reqs, num_slots=2, seed=0)
+        assert isinstance(report, ServeReport)
+        assert len(report) == 3 and report[0] in report.completed
+        for key in ("p50", "p95", "mean"):
+            assert report.ttft[key] >= 0.0
+            assert report.tpot[key] >= 0.0
+        assert report.ttft["p50"] <= report.ttft["p95"]
+        for r in report:
+            assert r.submitted_at <= r.first_token_at <= r.finished_at
+            assert r.phase == "done"
+
+    def test_single_token_requests_excluded_from_tpot(self, dense_model):
+        model, params = dense_model
+        rng = np.random.default_rng(10)
+        reqs = [Request(rid=0,
+                        prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                        max_new_tokens=1)]
+        eng = ServingEngine(model, params, _cfg())
+        report = eng.serve(reqs, num_slots=1)
+        assert report.ttft and not report.tpot
+
+    def test_phase_machine_through_scheduler(self):
+        cb = ContinuousBatcher(num_slots=1, total_pages=16)
+        r = Request(rid=0, prompt_len=32, max_new_tokens=4)
+        cb.submit(r)
+        assert r.phase == "queued" and r.submitted_at > 0.0
+        cb.admit()
+        assert r.phase == "prefilling"
+        view = cb.device_view()
+        assert view.prompt_len[0] == 32 and view.prefilled[0] == 0
+        r.prefilled = 32
+        assert cb.device_view().prefilled[0] == 32
+        cb.complete(r)
+        assert r.phase == "done" and r.finished_at >= r.submitted_at
+
+
+class TestWriteTokensLayer:
+    def test_matches_sequential_single_token_writes(self):
+        """The vectorized slice write is the per-token write, fused:
+        same pools for a slice that starts mid-page, crosses a page
+        boundary, and spills from the HBM pool into the host pool."""
+        rng = np.random.default_rng(0)
+        B, P_h, P_e, T, KH, HD = 2, 1, 2, 4, 2, 3
+        pools = [jnp.zeros((B, P, T, KH, HD)) for P in (P_h, P_h, P_e,
+                                                        P_e)]
+        C = 6
+        start = np.array([2, 5])               # mid-page offsets
+        n_valid = np.array([6, 3])
+        k_new = jnp.asarray(rng.standard_normal((B, C, KH, HD)),
+                            jnp.float32)
+        v_new = jnp.asarray(rng.standard_normal((B, C, KH, HD)),
+                            jnp.float32)
+
+        pos = start[:, None] + np.arange(C)[None, :]
+        slot = jnp.asarray(pos // T, jnp.int32)
+        off = jnp.asarray(pos % T, jnp.int32)
+        valid = jnp.asarray(np.arange(C)[None, :] < n_valid[:, None])
+        got = write_tokens_layer(*pools, slot, off, k_new, v_new, valid)
+
+        # reference: the single-token primitive, one call per valid
+        # token (other lanes parked on an OOB slot and dropped)
+        want = list(pools)
+        for b in range(B):
+            for j in range(int(n_valid[b])):
+                p, o = divmod(int(pos[b, j]), T)
+                sl = np.full((B,), P_h + P_e, np.int32)
+                sl[b] = p
+                want = list(write_token_layer(
+                    *want, jnp.asarray(sl), jnp.full((B,), o, jnp.int32),
+                    k_new[:, j], v_new[:, j]))
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
