@@ -38,16 +38,31 @@ A fifth comparison isolates what chunked prefill bought:
            decode lane behind the prompt forward (plus its compile);
            the chunked engine overlaps prefill slices with decode.
 
+A sixth mode sweeps the POLICY PLANE (EXPERIMENTS.md §Policy-plane):
+
+  policy-sweep — every registered device policy drives the same fused
+           generate stream with `trace_telemetry` on; the simulator
+           bridge (`repro.serving.trace_bridge`) scores each stream's
+           achieved placement against the SA upper bound and the
+           Belady oracle replayed on the SAME access pattern. Per
+           policy: wall-clock steps/s, HBM hit fraction,
+           fraction-of-SA-upper-bound, headroom vs static — plus the
+           one-executable-per-policy assert (swapping policies swaps a
+           traced function, never the architecture).
+
 Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite). The headline
 is fused/host steps-per-second; fused executable counts are asserted to
 stay at one compile per scan length (zero migration-driven or
 admission-driven retraces).
 
 Run:  PYTHONPATH=src python benchmarks/perf_engine.py
+      PYTHONPATH=src python benchmarks/perf_engine.py --policy-sweep
+      (sweep only, full geometry)
 CI:   PYTHONPATH=src python benchmarks/perf_engine.py --ci
-      (reduced geometry; additionally asserts fused >= eager steps/s
-      and chunked-admission TTFT < eager-admission TTFT for the
-      mid-stream long prompt)
+      (reduced geometry; additionally asserts fused >= eager steps/s,
+      chunked-admission TTFT < eager-admission TTFT for the mid-stream
+      long prompt, one executable per device policy, and importance
+      hit fraction >= static hit fraction in the policy sweep)
 """
 
 from __future__ import annotations
@@ -61,12 +76,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.sa import SAConfig
 from repro.core.tiers import GH200
 from repro.kvcache.migrate import MigrationPlan, apply_migrations
 from repro.kvcache.paged import prefill_cache
 from repro.models.model import Model
-from repro.serving import control
+from repro.serving import control, trace_bridge
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.policies import policy_names
 from repro.serving.scheduler import Request
 
 STEPS = 64          # multiple of STRIDE: scan lengths compile once in warmup
@@ -173,7 +190,7 @@ class HostLoopEngine(ServingEngine):
         cache = self._cache
         h_pages = int(np.asarray((cache.hbm_owner >= 0).sum()))
         e_pages = int(np.asarray((cache.host_owner >= 0).sum()))
-        self._record(np.asarray([[h_pages, e_pages, n_pro, n_dem]]))
+        self._record((np.asarray([[h_pages, e_pages, n_pro, n_dem]]),))
 
 
 # --------------------------------------------------------------------------- #
@@ -322,6 +339,65 @@ def _ttft_long_prompt(model, params, klass, *, stride, max_context,
     return long_req.first_token_at - long_req.submitted_at
 
 
+def _policy_sweep(model, params, *, steps, ci):
+    """Every registered device policy over the same fused generate
+    stream, scored live against the simulator bounds (see module doc).
+
+    The stream decodes batch 1 with a prompt that spills past the HBM
+    pool and Quest sparsity 0.5, so placement actually matters: the
+    read set concentrates on the top-importance pages and a policy
+    that promotes them converts host reads into HBM hits. Returns
+    {policy: {steps_per_s, hit_fraction, bound_fraction, ...}}.
+    """
+    sa_cfg = SAConfig(max_evaluations=12 if ci else 40,
+                      iters_per_level=4 if ci else 10, seed=0)
+    # fused generate compiles once per DISTINCT chunk length; round up
+    # so a ragged tail chunk can't trip the one-executable assert on a
+    # legitimate --steps value
+    steps = -(-steps // STRIDE) * STRIDE
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, model.cfg.vocab, (1, 272)),
+                          jnp.int32)
+    sweep = {}
+    for name in policy_names():
+        eng = ServingEngine(model, params, EngineConfig(
+            max_context=512, hbm_fraction=0.25, policy=name,
+            attention_sparsity=0.5, spec=GH200, promote_thresh=1e-4,
+            telemetry_stride=STRIDE, trace_telemetry=True))
+        eng.start(prompts)
+        eng.generate(jnp.array([1], jnp.int32), STRIDE)     # compile
+        eng.start(prompts)                                  # fresh stream
+        t0 = time.perf_counter()
+        out = eng.generate(jnp.array([1], jnp.int32), steps)
+        jax.block_until_ready(out)
+        sps = steps / (time.perf_counter() - t0)
+        # one executable per policy: policy-state values change every
+        # step, plan shapes and policy code never do
+        exes = eng._gen_jit._cache_size()
+        assert exes == 1, (name, exes)
+        rec = trace_bridge.collect(eng)
+        score = trace_bridge.score_headroom(rec, GH200, sa_cfg=sa_cfg)
+        sweep[name] = {
+            "steps_per_s": sps,
+            "hit_fraction": score["live_hit_fraction"],
+            "bound_fraction": score["bound_fraction"],
+            "headroom_vs_static": score["headroom_vs_static"],
+            "live_total_s": score["live_total_s"],
+            "sa_total_s": score["sa_total_s"],
+            "belady_total_s": score["belady_total_s"],
+            "static_total_s": score["static_total_s"],
+            "gen_executables": exes,
+        }
+    if ci:
+        # the whole point of dynamic placement, gated: the deployable
+        # policy must convert masked reads into HBM hits vs never
+        # migrating (equality allowed — a capacity-bound degenerate
+        # geometry can't be beaten)
+        assert sweep["importance"]["hit_fraction"] >= \
+            sweep["static"]["hit_fraction"], sweep
+    return sweep
+
+
 def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     cfg = configs.get_smoke("internlm2-1.8b")
     model = Model(cfg)
@@ -410,6 +486,17 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     rows.append(("perf/serve/ttft_long_eager", ttft_eager * 1e6,
                  ttft_eager))
 
+    sweep = _policy_sweep(model, params, steps=2 * STRIDE if ci else steps,
+                          ci=ci)
+    result["rows"]["policy_sweep"] = sweep
+    for name, row in sweep.items():
+        rows.append((f"policy/{name}/steps_per_s",
+                     1e6 / row["steps_per_s"], row["steps_per_s"]))
+        rows.append((f"policy/{name}/hit_fraction", 0.0,
+                     row["hit_fraction"]))
+        rows.append((f"policy/{name}/bound_fraction", 0.0,
+                     row["bound_fraction"]))
+
     with open("BENCH_engine.json", "w") as f:
         json.dump(result, f, indent=2)
     if print_csv:
@@ -418,11 +505,45 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     return result
 
 
+def run_policy_sweep(print_csv: bool = True, steps: int = STEPS):
+    """Standalone `--policy-sweep`: the policy plane only, full
+    geometry, appended into an existing BENCH_engine.json when present."""
+    cfg = configs.get_smoke("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    sweep = _policy_sweep(model, params, steps=steps, ci=False)
+    try:
+        with open("BENCH_engine.json") as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {"rows": {}}
+    result.setdefault("rows", {})["policy_sweep"] = sweep
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(result, f, indent=2)
+    if print_csv:
+        for name, row in sweep.items():
+            print(f"policy/{name}/steps_per_s,"
+                  f"{1e6 / row['steps_per_s']:.3f},"
+                  f"{row['steps_per_s']:.3f}")
+            print(f"policy/{name}/hit_fraction,0.000,"
+                  f"{row['hit_fraction']:.3f}")
+            print(f"policy/{name}/bound_fraction,0.000,"
+                  f"{row['bound_fraction']:.3f}")
+    return sweep
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=STEPS)
     ap.add_argument("--ci", action="store_true",
-                    help="reduced geometry + fused>=eager gate (CI smoke)")
+                    help="reduced geometry + fused>=eager + policy-sweep "
+                         "gates (CI smoke)")
+    ap.add_argument("--policy-sweep", action="store_true",
+                    help="run only the device-policy sweep (steps/s, hit "
+                         "fraction, fraction-of-SA-upper-bound per policy)")
     args = ap.parse_args()
-    run(steps=args.steps, ci=args.ci)
+    if args.policy_sweep:
+        run_policy_sweep(steps=args.steps)
+    else:
+        run(steps=args.steps, ci=args.ci)

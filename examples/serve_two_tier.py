@@ -2,9 +2,10 @@
 paged KV cache with dynamic placement — the paper's technique live.
 
 Pipeline: train a small model briefly (so generations aren't pure
-noise) -> prefill a batch of prompts -> decode with (a) static
-placement and (b) importance-EMA placement + Quest-style sparsity,
-comparing modeled throughput under the Eq.(1)-(5) cost model — then
+noise) -> prefill a batch of prompts -> decode under EVERY registered
+device placement policy (static / importance / recency / cost_aware /
+quest) with Quest-style sparsity, scoring each against the paper's SA
+upper bound via the live-telemetry simulator bridge — then
 `ServingEngine.serve`: a mixed-length request stream continuously
 batched through the same fused decode loop with on-device sampling.
 
@@ -16,10 +17,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.sa import SAConfig
 from repro.core.tiers import GH200
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models.model import Model
+from repro.serving import trace_bridge
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.policies import policy_names
 from repro.serving.sampling import SamplingConfig
 from repro.serving.scheduler import Request
 from repro.training.train_step import init_train_state, make_train_step
@@ -39,21 +43,31 @@ def main():
             corpus.batch(0, i)["tokens"])})
     print(f"trained 30 steps, loss {float(metrics['loss']):.3f}")
 
-    # --- serve with both placement policies ------------------------------
+    # --- the policy plane: every registered device policy, scored live
+    # against the SA upper bound by the telemetry bridge ------------------
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(corpus.batch(0, 99)["tokens"][:4, :64])
-    for policy, sparsity in (("static", 0.6), ("importance", 0.6)):
+    prompts = jnp.asarray(corpus.batch(0, 99)["tokens"][:1, :64])
+    sa_cfg = SAConfig(max_evaluations=16, iters_per_level=4, seed=0)
+    for policy in policy_names():
+        # max_context 384 -> a 16-page HBM pool + 16 host pages: the
+        # 320-token stream below spills past HBM without overrunning
+        # the cache
         eng = ServingEngine(model, state.params, EngineConfig(
-            max_context=256, hbm_fraction=0.25, policy=policy,
-            attention_sparsity=sparsity, spec=GH200,
-            promote_thresh=0.005))
+            max_context=384, hbm_fraction=0.25, policy=policy,
+            attention_sparsity=0.6, spec=GH200, promote_thresh=0.005,
+            trace_telemetry=True))
         eng.start(prompts)
-        # fused hot path: one lax.scan dispatch per telemetry_stride steps
+        # fused hot path: one lax.scan dispatch per telemetry_stride
+        # steps; decode far enough that the stream spills past the
+        # 16-page HBM pool and placement decisions actually bite
         tok = jnp.argmax(eng.step(prompts[:, -1]), -1).astype(jnp.int32)
-        generated = eng.generate(tok, 31)
+        generated = eng.generate(tok, 255)
+        score = trace_bridge.score_headroom(
+            trace_bridge.collect(eng), GH200, sa_cfg=sa_cfg)
         s = eng.summary()
         print(f"policy={policy:11s} modeled {s['modeled_tokens_per_s']:12.0f}"
-              f" tok/s  hit={s['mean_hbm_hit_rate']:.2f}"
+              f" tok/s  hit={score['live_hit_fraction']:.2f}"
+              f"  of-SA-bound={score['bound_fraction']:.2f}"
               f"  migrated={s['migrated_bytes'] / 1e6:.1f}MB")
 
     # --- continuous batching: a live request stream through serve() ------

@@ -38,6 +38,10 @@ class PlacementPolicy:
     name = "base"
     #: oracle policies read future trace rows; real-time policies must not.
     uses_foresight = False
+    #: registry name of the jit-safe live mirror of this policy in
+    #: `repro.serving.policies` (None for oracles the live engine
+    #: cannot run — they need foresight the device doesn't have).
+    device_counterpart: str | None = None
 
     def reset(self, sim: "HeteroMemSimulator") -> None:
         pass

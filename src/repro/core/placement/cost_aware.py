@@ -20,9 +20,31 @@ import numpy as np
 from repro.core.placement.base import DRAM, HBM, UNALLOC, PlacementPolicy
 
 
+def migration_economics(spec) -> tuple[float, float]:
+    """(gain_per_read, move_cost) in seconds/byte under the Eq.(3)/(4)
+    bandwidth constants of a `MemorySystemSpec`: what one resident byte
+    saves per read, and what moving one byte across the link costs.
+    Shared by this simulator policy and its live device counterpart
+    (`repro.serving.policies.CostAwarePolicy`)."""
+    gain_per_read = 1.0 / spec.effective_dram_read_bw - 1.0 / spec.hbm_bw
+    move_cost = 1.0 / spec.link_bw + 1.0 / spec.hbm_bw
+    return gain_per_read, move_cost
+
+
+def payback_threshold(spec, horizon_steps: float) -> float:
+    """Minimum per-step access rate (or attention-mass share) at which
+    promoting a page pays back its migration cost within
+    `horizon_steps` steps: rate * gain_per_read * horizon > move_cost.
+    Derived purely from the spec's HBM/link/DRAM bandwidth ratios, so a
+    harsher link (TPU PCIe vs GH200 NVLink-C2C) raises the bar."""
+    gain_per_read, move_cost = migration_economics(spec)
+    return move_cost / (gain_per_read * horizon_steps)
+
+
 class CostAwareHysteresis(PlacementPolicy):
     name = "cost_aware"
     uses_foresight = False
+    device_counterpart = "cost_aware"
 
     def __init__(self, ema: float = 0.15, promote_thresh: float = 0.5,
                  demote_thresh: float = 0.1,
@@ -35,10 +57,7 @@ class CostAwareHysteresis(PlacementPolicy):
     def reset(self, sim) -> None:
         self._rate = np.zeros(sim.trace.num_pages, dtype=np.float64)
         # benefit of an HBM-resident hot page per access (seconds/byte gap)
-        spec = sim.spec
-        self._gain_per_read = (1.0 / spec.effective_dram_read_bw
-                               - 1.0 / spec.hbm_bw)
-        self._move_cost = (1.0 / spec.link_bw + 1.0 / spec.hbm_bw)
+        self._gain_per_read, self._move_cost = migration_economics(sim.spec)
 
     def on_access(self, sim, step, accessed):
         hit = np.zeros(sim.trace.num_pages, dtype=np.float64)

@@ -22,7 +22,10 @@ from repro.core.placement.base import DRAM, HBM, PlacementPolicy
 
 class QuestPages(PlacementPolicy):
     name = "quest"
+    # one-step foresight: the live mirror promotes the pages the Quest
+    # top-k mask selects, which the device does know ahead of the read
     uses_foresight = True
+    device_counterpart = "quest"
 
     def __init__(self, unit_group: int = 1):
         self.unit_group = unit_group

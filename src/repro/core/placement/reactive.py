@@ -19,6 +19,7 @@ from repro.core.placement.base import DRAM, HBM, PlacementPolicy
 
 class ReactiveLRU(PlacementPolicy):
     name = "reactive"
+    device_counterpart = "recency"
 
     def __init__(self, max_promotions_per_step: int | None = None):
         # Optional cap (beyond-paper knob); None reproduces the paper.

@@ -12,3 +12,4 @@ from repro.core.placement.base import PlacementPolicy
 
 class StaticPlacement(PlacementPolicy):
     name = "static"
+    device_counterpart = "static"

@@ -21,7 +21,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.latency_model import (
-    StepTraffic, hbm_latency, dram_latency,
+    StepTraffic, dram_latency, hbm_latency,
 )
 from repro.core.placement.base import DRAM, HBM, UNALLOC, PlacementPolicy
 from repro.core.tiers import MemorySystemSpec
@@ -40,6 +40,10 @@ class SimResult:
     step_latency_s: np.ndarray
     spec_name: str
     include_weights: bool
+    #: per-step traffic volumes ([steps]-arrays per field), so callers
+    #: can re-aggregate across layers/requests before pricing Eq. (2)
+    #: (see repro.serving.trace_bridge).
+    step_traffic: Optional[StepTraffic] = None
 
     def speedup_over(self, other: "SimResult") -> float:
         if self.total_latency_s == 0.0:
@@ -135,6 +139,8 @@ class HeteroMemSimulator:
 
         steps = tr.num_steps
         lat = np.zeros(steps, dtype=np.float64)
+        vol = StepTraffic(*(np.zeros(steps, dtype=np.float64)
+                            for _ in range(6)))
         hits = 0
         reads = 0
         migrated = 0.0
@@ -180,6 +186,9 @@ class HeteroMemSimulator:
             t = StepTraffic(h_read=h_read, e_read=e_read, h_write=h_write,
                             e_write=e_write, m_in=m_in, m_out=m_out)
             lat[s] = max(hbm_latency(t, spec), dram_latency(t, spec))
+            for field in ("h_read", "e_read", "h_write", "e_write",
+                          "m_in", "m_out"):
+                getattr(vol, field)[s] = getattr(t, field)
 
             hits += n_hbm
             reads += len(acc)
@@ -199,6 +208,7 @@ class HeteroMemSimulator:
             step_latency_s=lat,
             spec_name=spec.name,
             include_weights=self.include_weights,
+            step_traffic=vol,
         )
 
 

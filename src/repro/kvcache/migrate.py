@@ -73,6 +73,12 @@ class MigrationPlan:
     def capacity(self) -> int:
         return self.pro_layer.shape[0]
 
+    def row_counts(self) -> Tuple[jax.Array, jax.Array]:
+        """(n_promotes, n_demotes) actually encoded in the plan — the
+        non-sentinel rows. jit-safe; matches the counts a planner
+        returned when it built the plan (telemetry cross-check)."""
+        return (jnp.sum(self.pro_layer >= 0), jnp.sum(self.dem_layer >= 0))
+
 
 def _oob(idx, ok, bound):
     """Route masked rows out of bounds (dropped by mode='drop').

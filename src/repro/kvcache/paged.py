@@ -31,6 +31,12 @@ import jax.numpy as jnp
 
 NO_SLOT = jnp.int32(-1)
 
+#: EMA decay of the per-page attention-mass importance statistic
+#: (`PagedKVCache.importance`), applied by the decode data plane every
+#: step. Shared here so the device policies (repro.serving.policies)
+#: can derive payback horizons from the same constant the kernel uses.
+IMPORTANCE_EMA = 0.25
+
 
 @dataclasses.dataclass(frozen=True)
 class CacheGeometry:

@@ -19,8 +19,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.kvcache.paged import (
-    PagedKVCache, allocate_prompt_pages, write_token_layer,
-    write_tokens_layer,
+    IMPORTANCE_EMA, PagedKVCache, allocate_prompt_pages,
+    write_token_layer, write_tokens_layer,
 )
 from repro.models.config import ModelConfig
 from repro.models.layers import (
@@ -339,7 +339,7 @@ def _update_cache_after_step(cache, k_hbm, v_hbm, k_host, v_host, imp,
 
     # importance: EMA over per-page attention mass. imp is [L, B, Ph+Pe]
     # in tier-slot order; scatter back to logical pages via owners.
-    ema = 0.25
+    ema = IMPORTANCE_EMA
     owner = jnp.concatenate([cache.hbm_owner, cache.host_owner], axis=2)
     owner_safe = jnp.clip(owner, 0, max_pages - 1)
     mass = jnp.zeros_like(cache.importance)

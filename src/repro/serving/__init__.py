@@ -1,6 +1,10 @@
 from repro.serving.engine import ServingEngine, EngineConfig, StepStats
+from repro.serving.policies import (
+    DevicePolicy, make_policy, policy_names, register,
+)
 from repro.serving.sampling import SamplingConfig
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 __all__ = ["ServingEngine", "EngineConfig", "StepStats", "SamplingConfig",
-           "ContinuousBatcher", "Request"]
+           "ContinuousBatcher", "Request", "DevicePolicy", "make_policy",
+           "policy_names", "register"]

@@ -95,11 +95,26 @@ def plan_capacity(geo, frac: float) -> int:
     return geo.num_layers * geo.batch * migration_budget(geo, frac)
 
 
-def plan_migrations(cache: PagedKVCache, *, budget: int,
-                    promote_thresh: float,
-                    active: Optional[jax.Array] = None,
-                    ) -> Tuple[MigrationPlan, jax.Array, jax.Array]:
-    """Importance-EMA hysteresis planner, vectorized over [L, B].
+def plan_by_score(cache: PagedKVCache, host_score: jax.Array,
+                  hbm_score: jax.Array, *, budget: int,
+                  promote_thresh, active: Optional[jax.Array] = None,
+                  ) -> Tuple[MigrationPlan, jax.Array, jax.Array]:
+    """Generic fixed-capacity promote/demote pairing by per-slot score.
+
+    The planner core shared by every device policy (see
+    `repro.serving.policies`): per (layer, batch), promote the `budget`
+    highest-scoring host slots above `promote_thresh`; free HBM slots
+    are consumed first, then the lowest-scoring residents are swapped
+    out — the i-th best candidate displaces the i-th worst victim only
+    if strictly higher-scoring, reproducing the sequential early-break
+    of the loop form.
+
+    host_score [L, B, Pe]: candidate score per host slot. -inf marks
+      an ineligible slot (free, or excluded by the policy).
+    hbm_score [L, B, Ph]: victim score per HBM slot. -inf marks a free
+      slot (always a valid destination); +inf protects a resident from
+      eviction (a candidate's finite score can never beat it).
+    promote_thresh: float or traced scalar — candidates must exceed it.
 
     Returns (plan, n_promotes, n_demotes); the plan's capacity is
     L * B * budget regardless of how many rows are live, so
@@ -110,29 +125,19 @@ def plan_migrations(cache: PagedKVCache, *, budget: int,
     moves, so completed/empty lanes never churn pages and their counts
     never pollute the telemetry.
     """
-    imp = cache.importance                                         # [L,B,P]
     ho, eo = cache.hbm_owner, cache.host_owner
     L, B, Ph = ho.shape
     Pe = eo.shape[2]
     assert 1 <= budget <= min(Ph, Pe), (budget, Ph, Pe)
-    neg_inf = jnp.float32(-jnp.inf)
 
-    # hottest `budget` host-resident pages
-    host_occ = eo >= 0
-    host_imp = jnp.where(
-        host_occ, jnp.take_along_axis(imp, jnp.maximum(eo, 0), axis=-1),
-        neg_inf)
-    cand_imp, cand_slot = jax.lax.top_k(host_imp, budget)          # [L,B,M]
+    # best `budget` candidate host slots
+    cand_imp, cand_slot = jax.lax.top_k(host_score, budget)       # [L,B,M]
     cand_logical = jnp.take_along_axis(eo, cand_slot, axis=-1)
 
-    # destination ranking: free HBM slots (importance -inf) first, then
-    # coldest residents — ascending stable sort does both at once
-    hbm_occ = ho >= 0
-    hbm_imp = jnp.where(
-        hbm_occ, jnp.take_along_axis(imp, jnp.maximum(ho, 0), axis=-1),
-        neg_inf)
-    dst_slot = jnp.argsort(hbm_imp, axis=-1)[..., :budget].astype(jnp.int32)
-    victim_imp = jnp.take_along_axis(hbm_imp, dst_slot, axis=-1)
+    # destination ranking: free HBM slots (score -inf) first, then the
+    # worst residents — ascending stable sort does both at once
+    dst_slot = jnp.argsort(hbm_score, axis=-1)[..., :budget].astype(jnp.int32)
+    victim_imp = jnp.take_along_axis(hbm_score, dst_slot, axis=-1)
     victim_logical = jnp.take_along_axis(ho, dst_slot, axis=-1)
 
     promote = (cand_imp > promote_thresh) & (victim_imp < cand_imp)
@@ -157,6 +162,30 @@ def plan_migrations(cache: PagedKVCache, *, budget: int,
         *rows(demote, lidx, bidx, dst_slot, cand_slot, victim_logical),
     )
     return plan, promote.sum(), demote.sum()
+
+
+def slot_scores(values: jax.Array, owner: jax.Array) -> jax.Array:
+    """Gather per-logical-page `values` [L, B, max_pages] to per-slot
+    scores [L, B, P] through an owner map; free slots score -inf."""
+    gathered = jnp.take_along_axis(values, jnp.maximum(owner, 0), axis=-1)
+    return jnp.where(owner >= 0, gathered, jnp.float32(-jnp.inf))
+
+
+def plan_migrations(cache: PagedKVCache, *, budget: int,
+                    promote_thresh: float,
+                    active: Optional[jax.Array] = None,
+                    ) -> Tuple[MigrationPlan, jax.Array, jax.Array]:
+    """Importance-EMA hysteresis planner, vectorized over [L, B].
+
+    The `importance` device policy: `plan_by_score` over the
+    attention-mass EMA — the hottest host-resident pages above
+    `promote_thresh` displace the coldest HBM residents.
+    """
+    imp = cache.importance                                         # [L,B,P]
+    host_imp = slot_scores(imp, cache.host_owner)
+    hbm_imp = slot_scores(imp, cache.hbm_owner)
+    return plan_by_score(cache, host_imp, hbm_imp, budget=budget,
+                         promote_thresh=promote_thresh, active=active)
 
 
 # --------------------------------------------------------------------------

@@ -45,9 +45,14 @@ bitwise identical and their byte accounting matches exactly:
                                  Returns a `ServeReport` (completed
                                  requests + TTFT/TPOT percentiles).
 
-Engine policies: "static" (never migrate) and "importance" (cost-aware
-hysteresis on the attention-mass EMA — our deployable beyond-paper
-policy).
+Engine policies are a pluggable PLANE (`repro.serving.policies`): every
+registered `DevicePolicy` — static, importance, recency, cost_aware,
+quest — plans through the same fixed-capacity `control.plan_by_score`
+core and threads its own (statically shaped) state through the scan,
+so each policy runs the full serve stream on ONE compiled executable.
+`EngineConfig.trace_telemetry` additionally captures per-step page
+accesses + placements, which `repro.serving.trace_bridge` converts
+into simulator traces and scores against the paper's SA upper bound.
 """
 
 from __future__ import annotations
@@ -66,6 +71,7 @@ from repro.kvcache.migrate import apply_migrations
 from repro.kvcache.paged import PagedKVCache, abstract_cache, init_cache
 from repro.models.model import Model
 from repro.serving import control
+from repro.serving.policies import make_policy, policy_names
 from repro.serving.sampling import (
     SamplingConfig, lane_key, make_sampler, split_lanes,
 )
@@ -92,8 +98,27 @@ class EngineConfig:
     #: every prompt length; chunking is bitwise-invisible (any budget
     #: reproduces the whole-prompt prefill exactly).
     prefill_chunk: int = 32
+    #: per-BATCH prefill token budget for mixed serve steps (None =
+    #: uncapped). A token bucket refilled `prefill_budget` tokens per
+    #: step: the prefill plane runs only when the accrued budget covers
+    #: the step's total prompt-slice demand across lanes, so a heavy
+    #: prefill wave dilutes over steps instead of taxing every decode
+    #: step — decode TPOT under the wave improves, TTFT of the wave
+    #: stretches. GREEDY streams are token-for-token unchanged
+    #: (schedule only); sampled streams (temperature > 0) stay
+    #: per-request reproducible but draw from a shifted point of the
+    #: lane's key chain, since each lane's PRNG advances every step
+    #: and the budget moves the prefill-to-decode crossing. Per-lane
+    #: `prefill_chunk` still bounds each slice.
+    prefill_budget: Optional[int] = None
     #: stop token for `serve` (None = budget-only completion)
     eos_id: Optional[int] = None
+    #: capture per-step (page access, read-time placement) telemetry of
+    #: batch lane 0 for the simulator bridge
+    #: (`repro.serving.trace_bridge`). Supported by the step/run/
+    #: generate drive modes; `serve` rejects it (per-lane streams
+    #: overlap there, so a single-lane trace would be meaningless).
+    trace_telemetry: bool = False
 
 
 @dataclasses.dataclass
@@ -160,11 +185,22 @@ def _set_cache(state, cache):
 
 class ServingEngine:
     def __init__(self, model: Model, params, cfg: EngineConfig):
+        if cfg.policy not in policy_names():
+            raise ValueError(
+                f"unknown EngineConfig.policy {cfg.policy!r}; registered "
+                f"device policies: {', '.join(policy_names())}")
+        if cfg.prefill_budget is not None and cfg.prefill_budget < 1:
+            raise ValueError(
+                f"EngineConfig.prefill_budget must be >= 1 tokens/step "
+                f"or None (uncapped), got {cfg.prefill_budget}")
         self.model = model
         self.params = params
         self.cfg = cfg
         self.stats: List[StepStats] = []
         self._sampling = SamplingConfig()
+        #: raw (stats, access, tier) chunks when cfg.trace_telemetry
+        #: (consumed by repro.serving.trace_bridge.collect)
+        self._trace_log: List[tuple] = []
 
     # ------------------------------------------------------------------ #
     def start(self, prompts: jax.Array, extra=None):
@@ -176,6 +212,9 @@ class ServingEngine:
                                            extra=extra)
         self.state = state
         self._ensure_step_fns()
+        self._pstate = self._policy.init_state(geo)
+        self._trace_log = []
+        self._trace_prompt_len = int(prompts.shape[1])
         return logits
 
     @property
@@ -204,19 +243,26 @@ class ServingEngine:
             fam in ("ssm", "hybrid")
             and bool(model.cfg.attention_layer_ids()))
         masked = sparsity > 0 and has_cache
-        migrate = cfg.policy != "static"
+        policy = make_policy(cfg.policy, cfg=cfg, geo=geo)
+        self._policy = policy
         budget = control.migration_budget(geo, cfg.migration_budget_frac)
-        thresh = cfg.promote_thresh
+        capture = cfg.trace_telemetry
         eos = cfg.eos_id
         sampler = make_sampler(self._sampling)
         self._sampler = sampler
 
-        def step_fn(params, state, token, active=None):
+        def step_fn(params, state, pstate, token, active=None):
             cache = _get_cache(state)
             kwargs = {"write_slot": control.choose_write_slot(cache)}
+            mask = None
             if masked:
-                kwargs["logical_page_mask"] = control.quest_page_mask(
-                    cache, sparsity)
+                mask = control.quest_page_mask(cache, sparsity)
+                kwargs["logical_page_mask"] = mask
+            # the read set this step's attention streams: the Quest
+            # mask (already alive-gated), or every pre-decode page —
+            # handed to the policy (so access-history policies track
+            # the true stream) and to the telemetry capture
+            read = mask if mask is not None else cache.page_table >= 0
             logits, state = model.decode_step(params, state, token,
                                               **kwargs)
             if active is not None:
@@ -228,40 +274,52 @@ class ServingEngine:
             # read traffic is counted on post-decode, pre-migration
             # residency (the step's attention read the old placement)
             occ = control.occupancy(cache)
-            if migrate:
-                plan, n_pro, n_dem = control.plan_migrations(
-                    cache, budget=budget, promote_thresh=thresh,
-                    active=active)
-                state = _set_cache(state, apply_migrations(cache, plan))
-                moves = jnp.stack([n_pro, n_dem]).astype(jnp.int32)
+            plan, pstate, (n_pro, n_dem) = policy.plan(
+                cache, pstate, active, budget, read_mask=read)
+            moves = jnp.stack([n_pro, n_dem]).astype(jnp.int32)
+            base = jnp.concatenate([occ, moves])
+            if capture:
+                # lane 0's read-time placement (post-decode so the
+                # step's fresh page is included, pre-migration)
+                slot = cache.page_table[:, 0]                  # [L, P]
+                hbm_pages = cache.k_hbm.shape[2]
+                tier = jnp.where(
+                    slot < 0, jnp.int8(-1),
+                    jnp.where(slot < hbm_pages, jnp.int8(0), jnp.int8(1)))
+                stats = (base, read[:, 0], tier)
             else:
-                moves = jnp.zeros((2,), jnp.int32)
-            return logits, state, jnp.concatenate([occ, moves])
+                stats = (base,)
+            state = _set_cache(state, apply_migrations(cache, plan))
+            return logits, state, pstate, stats
 
-        def chunk_fn(params, state, tokens):
+        def chunk_fn(params, state, pstate, tokens):
             """Teacher-forced fused decode over tokens [n, B]."""
-            def body(st, tok):
-                logits, st, stats = step_fn(params, st, tok)
-                return st, (logits, stats)
-            state, (logits, stats) = jax.lax.scan(body, state, tokens)
-            return state, logits, stats
+            def body(carry, tok):
+                st, ps = carry
+                logits, st, ps, stats = step_fn(params, st, ps, tok)
+                return (st, ps), (logits, stats)
+            (state, pstate), (logits, stats) = jax.lax.scan(
+                body, (state, pstate), tokens)
+            return state, pstate, logits, stats
 
-        def gen_fn(params, state, token, n):
+        def gen_fn(params, state, pstate, token, n):
             """Greedy self-feeding fused decode for n steps."""
             def body(carry, _):
-                st, tok = carry
-                logits, st, stats = step_fn(params, st, tok)
+                st, ps, tok = carry
+                logits, st, ps, stats = step_fn(params, st, ps, tok)
                 nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-                return (st, nxt), (nxt, stats)
-            (state, token), (toks, stats) = jax.lax.scan(
-                body, (state, token), None, length=n)
-            return state, token, toks, stats
+                return (st, ps, nxt), (nxt, stats)
+            (state, pstate, token), (toks, stats) = jax.lax.scan(
+                body, (state, pstate, token), None, length=n)
+            return state, pstate, token, toks, stats
 
         serveable = fam in ("dense", "moe")
         if serveable:
             C = max(1, cfg.prefill_chunk)
             S_cap = geo.max_tokens
             B = geo.batch
+            Pb = cfg.prefill_budget
+            use_budget = Pb is not None
             pf_logits_sds, _ = jax.eval_shape(
                 lambda c, t, s, n: model.prefill_chunk(self.params, c,
                                                        t, s, n),
@@ -270,8 +328,9 @@ class ServingEngine:
                 jax.ShapeDtypeStruct((B,), jnp.int32),
                 jax.ShapeDtypeStruct((B,), jnp.int32))
 
-        def serve_chunk_fn(params, state, token, active, remaining, keys,
-                           prefilled, prompt_len, prompt_buf):
+        def serve_chunk_fn(params, state, pstate, token, active, remaining,
+                           keys, prefilled, prompt_len, prompt_buf,
+                           credits):
             """One fused chunk of MIXED prefill+decode steps.
 
             Carries per-slot (token, active, remaining budget, PRNG key,
@@ -291,7 +350,7 @@ class ServingEngine:
             boundary.
             """
             def body(carry, _):
-                st, tok, act, rem, ks, prog = carry
+                st, ps, tok, act, rem, ks, prog, cred = carry
                 pf, dec = control.lane_modes(act, prog, prompt_len)
 
                 # decode plane: skipped (lax.cond) on pure-prefill
@@ -301,18 +360,18 @@ class ServingEngine:
                 # filtered at the boundary, so skipping it only saves
                 # the dead forward
                 def run_dec(args):
-                    return step_fn(params, args[0], args[1], dec)
+                    return step_fn(params, args[0], args[1], args[2], dec)
 
                 def skip_dec(args):
                     occ = control.occupancy(_get_cache(args[0]))
                     vocab = pf_logits_sds.shape[-1]
                     return (jnp.zeros((B, vocab), pf_logits_sds.dtype),
-                            args[0],
-                            jnp.concatenate(
-                                [occ, jnp.zeros((2,), jnp.int32)]))
+                            args[0], args[1],
+                            (jnp.concatenate(
+                                [occ, jnp.zeros((2,), jnp.int32)]),))
 
-                logits, st, stats = jax.lax.cond(dec.any(), run_dec,
-                                                 skip_dec, (st, tok))
+                logits, st, ps, stats = jax.lax.cond(
+                    dec.any(), run_dec, skip_dec, (st, ps, tok))
                 ks, sub = split_lanes(ks)
                 nxt = sampler(logits, sub)
                 rem = rem - dec.astype(rem.dtype)
@@ -327,6 +386,18 @@ class ServingEngine:
                 # written straight into its pages at offset `prog`
                 n_val = jnp.where(pf, jnp.clip(prompt_len - prog, 0, C),
                                   0).astype(jnp.int32)
+                if use_budget:
+                    # per-batch token bucket: accrue Pb tokens/step
+                    # (capped at one full step's demand) and run the
+                    # prefill plane only when the bucket covers the
+                    # step's TOTAL demand — heavy prefill waves dilute
+                    # over steps instead of taxing every decode step
+                    want_tot = n_val.sum()
+                    cred = jnp.minimum(cred + jnp.int32(Pb),
+                                       jnp.int32(B * C))
+                    run_now = cred >= want_tot
+                    n_val = jnp.where(run_now, n_val, 0)
+                    cred = cred - jnp.where(run_now, want_tot, 0)
                 idx = jnp.clip(prog[:, None] + jnp.arange(C), 0,
                                S_cap - 1)
                 sl_toks = jnp.take_along_axis(prompt_buf, idx, axis=1)
@@ -340,8 +411,11 @@ class ServingEngine:
                     return (jnp.zeros(pf_logits_sds.shape,
                                       pf_logits_sds.dtype), args[0])
 
+                # (n_val > 0).any() == pf.any() when unbudgeted (a
+                # prefilling lane always wants >= 1 token); under a
+                # budget it additionally skips bucket-starved steps
                 logits_c, cache = jax.lax.cond(
-                    pf.any(), run_pf, skip_pf,
+                    (n_val > 0).any(), run_pf, skip_pf,
                     (cache, sl_toks, prog, n_val))
                 st = _set_cache(st, cache)
                 prog = prog + n_val
@@ -357,22 +431,25 @@ class ServingEngine:
                 if eos is not None:
                     fin0 = fin0 | (crossed & (tok0 == eos))
                 act = act & ~fin0
-                return (st, tok, act, rem, ks, prog), (emitted, first,
-                                                       stats)
-
-            carry = (state, token, active, remaining, keys, prefilled)
-            carry, (emitted, first, stats) = jax.lax.scan(
-                body, carry, None, length=max(1, cfg.telemetry_stride))
-            state, token, active, remaining, keys, prefilled = carry
-            return (state, token, active, remaining, keys, prefilled,
+                return (st, ps, tok, act, rem, ks, prog, cred), (
                     emitted, first, stats)
 
-        self._step_jit = jax.jit(step_fn, donate_argnums=(1,))
-        self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1,))
-        self._gen_jit = jax.jit(gen_fn, donate_argnums=(1,),
-                                static_argnums=(3,))
+            carry = (state, pstate, token, active, remaining, keys,
+                     prefilled, credits)
+            carry, (emitted, first, stats) = jax.lax.scan(
+                body, carry, None, length=max(1, cfg.telemetry_stride))
+            (state, pstate, token, active, remaining, keys, prefilled,
+             credits) = carry
+            return (state, pstate, token, active, remaining, keys,
+                    prefilled, credits, emitted, first, stats)
+
+        self._step_jit = jax.jit(step_fn, donate_argnums=(1, 2))
+        self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1, 2))
+        self._gen_jit = jax.jit(gen_fn, donate_argnums=(1, 2),
+                                static_argnums=(4,))
         if serveable:
-            self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=(1,))
+            self._serve_jit = jax.jit(serve_chunk_fn,
+                                      donate_argnums=(1, 2))
         self._release_jit = jax.jit(control.release_lanes,
                                     donate_argnums=(0,))
 
@@ -381,9 +458,9 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     def step(self, token: jax.Array) -> jax.Array:
         """Eager: one device dispatch + one telemetry sync per token."""
-        logits, self.state, stats = self._step_jit(
-            self.params, self.state, token)
-        self._record(np.asarray(stats)[None])
+        logits, self.state, self._pstate, stats = self._step_jit(
+            self.params, self.state, self._pstate, token)
+        self._record(tuple(np.asarray(x)[None] for x in stats))
         return logits
 
     def run(self, tokens: jax.Array) -> jax.Array:
@@ -399,9 +476,10 @@ class ServingEngine:
         stride = max(1, self.cfg.telemetry_stride)
         out = []
         for s in range(0, K, stride):
-            self.state, logits, stats = self._chunk_jit(
-                self.params, self.state, tokens[s:s + stride])
-            self._record(np.asarray(stats))
+            self.state, self._pstate, logits, stats = self._chunk_jit(
+                self.params, self.state, self._pstate,
+                tokens[s:s + stride])
+            self._record(tuple(np.asarray(x) for x in stats))
             out.append(logits)
         return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)
 
@@ -414,9 +492,9 @@ class ServingEngine:
         done = 0
         while done < steps:
             n = min(stride, steps - done)
-            self.state, token, toks, stats = self._gen_jit(
-                self.params, self.state, token, n)
-            self._record(np.asarray(stats))
+            self.state, self._pstate, token, toks, stats = self._gen_jit(
+                self.params, self.state, self._pstate, token, n)
+            self._record(tuple(np.asarray(x) for x in stats))
             out.append(toks)
             done += n
         return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)
@@ -469,6 +547,11 @@ class ServingEngine:
                 f"serve() drives cache-backed decode states (dense/moe); "
                 f"family {fam!r} needs prefill extras or recurrent-state "
                 f"lane insertion")
+        if cfg.trace_telemetry:
+            raise NotImplementedError(
+                "trace_telemetry captures a single lane's stream; serve "
+                "overlaps per-lane streams — drive step/run/generate "
+                "for the simulator bridge instead")
         if not requests:
             return ServeReport(completed=[])
         B = num_slots if num_slots is not None else min(len(requests), 4)
@@ -490,6 +573,8 @@ class ServingEngine:
         self.stats = []
         self._sampling = sampling or SamplingConfig()
         self._ensure_step_fns()
+        pstate = self._policy.init_state(geo)
+        credits = jnp.zeros((), jnp.int32)   # prefill token bucket
 
         pool = total_pages if total_pages is not None \
             else B * geo.max_pages
@@ -534,13 +619,13 @@ class ServingEngine:
                     f"request {stuck.rid} needs {stuck.pages_needed} pages"
                     f" but the pool has only {batcher.total_pages}")
             t0 = time.time()
-            (self.state, tok_d, act_d, _rem_d, keys_d, prog_d, emitted,
-             first, stats) = self._serve_jit(
-                self.params, self.state, jnp.asarray(hs["token"]),
+            (self.state, pstate, tok_d, act_d, _rem_d, keys_d, prog_d,
+             credits, emitted, first, stats) = self._serve_jit(
+                self.params, self.state, pstate, jnp.asarray(hs["token"]),
                 jnp.asarray(view.active), jnp.asarray(view.remaining),
                 jnp.asarray(hs["keys"]), jnp.asarray(view.prefilled),
                 jnp.asarray(view.prompt_len),
-                jnp.asarray(hs["prompt_buf"]))
+                jnp.asarray(hs["prompt_buf"]), credits)
             emitted = np.asarray(emitted)               # [stride, B]
             first = np.asarray(first)                   # [stride, B]
             hs["token"] = np.array(tok_d)               # writable copies:
@@ -550,7 +635,7 @@ class ServingEngine:
             # telemetry: only steps where at least one lane DECODED —
             # prefill-only steps (first tokens included) are charged to
             # the prefill stage, matching the simulator's convention
-            self._record(np.asarray(stats)[emitted.max(axis=1) >= 0])
+            self._record((np.asarray(stats[0])[emitted.max(axis=1) >= 0],))
             # per-step wall-clock stamps: the chunk's device events are
             # observed at the boundary, so spread its wall time evenly
             # over the stride — TTFT/TPOT then resolve WITHIN a chunk
@@ -613,9 +698,15 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     # telemetry (host side, Eq. (1)-(5) pricing)
     # ------------------------------------------------------------------ #
-    def _record(self, stats: np.ndarray):
-        """stats: [n, 4] int32 rows of (hbm_pages, host_pages, promotes,
-        demotes) straight off the device."""
+    def _record(self, stats):
+        """stats: a tuple off the device — `(base,)` or, with
+        `cfg.trace_telemetry`, `(base, access, tier)` where base is
+        [n, 4] int32 rows of (hbm_pages, host_pages, promotes, demotes)
+        and access/tier are lane 0's per-step [n, L, P] page read set
+        and placement (kept raw for trace_bridge.collect)."""
+        if len(stats) == 3:
+            self._trace_log.append(stats)
+        stats = stats[0]
         geo = self.geo
         pb = geo.page_bytes()
         frac = 1.0 - self.cfg.attention_sparsity

@@ -1,0 +1,291 @@
+"""Pluggable on-device placement policies — the policy plane of the
+fused serve loop.
+
+The paper scores seven placement policies against the SA upper bound in
+the host simulator (`repro.core.placement`), but a simulator verdict is
+only as good as its model. This module puts the same policy *family* on
+the live hot path: every policy below is jit-safe, statically shaped,
+and plans through the shared fixed-capacity pairing core
+(`control.plan_by_score`), so each one compiles into ONE serve
+executable per geometry — swapping policies swaps a traced function,
+never the architecture. The simulator bridge
+(`repro.serving.trace_bridge`) then closes the loop by scoring each
+policy's live telemetry against the SA bound and the Belady oracle.
+
+Protocol (duck-typed, no registration of the engine required):
+
+  init_state(geo) -> pytree     policy state threaded through the
+                                serve `lax.scan` (empty tuple for
+                                stateless policies). Values may change
+                                every step; shapes may not (zero
+                                retraces across the stream).
+  plan(cache, state, active, budget, read_mask=None)
+      -> (MigrationPlan, state, (n_promotes, n_demotes))
+                                one planning step. The plan's capacity
+                                must be the geometry constant
+                                `control.plan_capacity` so
+                                `apply_migrations` compiles once.
+                                `read_mask` (bool [L, B, max_pages],
+                                optional) is the page set THIS step's
+                                attention actually read — the engine's
+                                pre-decode Quest mask, or every
+                                pre-decode page when dense — so
+                                history-tracking policies see the same
+                                access stream the telemetry records.
+
+Registered policies (EngineConfig.policy):
+
+  static      never migrates — an empty plan, the paper's baseline #2.
+  importance  the attention-mass-EMA hysteresis planner (today's
+              deployable default, `control.plan_migrations`).
+  recency     LRU by last-access step — the live mirror of
+              `core/placement/reactive.py`: host pages read this step
+              are promoted, the least-recently-read HBM residents make
+              room.
+  cost_aware  importance hysteresis with thresholds DERIVED from the
+              memory system's bandwidth ratios
+              (`core/placement/cost_aware.payback_threshold`): a page
+              is promoted only when its attention-mass share pays back
+              the link cost within the importance-EMA horizon; warm
+              residents are protected from eviction (hysteresis band).
+  quest       promotes exactly the pages the Quest top-k mask will
+              read next (one-step mask foresight — the live mirror of
+              `core/placement/quest_pages.py`); mask-resident HBM
+              pages are never evicted.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.placement.cost_aware import payback_threshold
+from repro.kvcache.migrate import MigrationPlan
+from repro.kvcache.paged import IMPORTANCE_EMA, PagedKVCache
+from repro.serving import control
+
+Counts = Tuple[jax.Array, jax.Array]
+PlanResult = Tuple[MigrationPlan, Any, Counts]
+
+_NEG_INF = jnp.float32(-jnp.inf)
+_POS_INF = jnp.float32(jnp.inf)
+
+
+class DevicePolicy:
+    """Base class for jit-safe migration planners (see module doc)."""
+
+    name = "base"
+
+    def __init__(self, *, cfg, geo):
+        del cfg, geo
+
+    def init_state(self, geo) -> Any:
+        """Fresh policy state for a stream over `geo` (pytree of arrays
+        with stream-independent shapes; `()` for stateless policies)."""
+        del geo
+        return ()
+
+    def plan(self, cache: PagedKVCache, state: Any, active, budget: int,
+             read_mask=None) -> PlanResult:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Callable[..., DevicePolicy]] = {}
+
+
+def register(name: str):
+    """Class decorator: make a DevicePolicy selectable by
+    `EngineConfig.policy`."""
+    def deco(factory):
+        assert name not in _REGISTRY, name
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def policy_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_policy(name: str, *, cfg, geo) -> DevicePolicy:
+    """Build a registered policy for an engine config + cache geometry.
+
+    `cfg` is duck-typed (an `EngineConfig`): policies read the static
+    knobs they need (promote_thresh, attention_sparsity, spec, ...) at
+    construction so the planning function itself stays pure.
+    """
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown device policy {name!r}; registered policies: "
+            f"{', '.join(policy_names())}")
+    return _REGISTRY[name](cfg=cfg, geo=geo)
+
+
+@register("static")
+class StaticPolicy(DevicePolicy):
+    """Never migrate (paper baseline #2) — a real policy, not an engine
+    special case: the step applies an all-sentinel plan, which
+    `apply_migrations` drops bitwise."""
+
+    name = "static"
+
+    def plan(self, cache, state, active, budget,
+             read_mask=None) -> PlanResult:
+        L, B, _ = cache.hbm_owner.shape
+        zero = jnp.zeros((), jnp.int32)
+        return MigrationPlan.empty(L * B * budget), state, (zero, zero)
+
+
+@register("importance")
+class ImportancePolicy(DevicePolicy):
+    """Attention-mass-EMA hysteresis (`control.plan_migrations`) —
+    bitwise identical to the planner the fused engine shipped with."""
+
+    name = "importance"
+
+    def __init__(self, *, cfg, geo):
+        super().__init__(cfg=cfg, geo=geo)
+        self._thresh = cfg.promote_thresh
+
+    def plan(self, cache, state, active, budget,
+             read_mask=None) -> PlanResult:
+        plan, n_pro, n_dem = control.plan_migrations(
+            cache, budget=budget, promote_thresh=self._thresh,
+            active=active)
+        return plan, state, (n_pro, n_dem)
+
+
+@register("recency")
+class RecencyPolicy(DevicePolicy):
+    """LRU by last-access step (live mirror of ReactiveLRU).
+
+    A page is "accessed" when this step's read set includes it — the
+    engine-supplied `read_mask` (the pre-decode Quest mask attention
+    actually streamed, or every pre-decode page when dense — the exact
+    access stream the trace telemetry records and the simulator mirror
+    replays). Host pages accessed within `window` steps are promotion
+    candidates (most recently read first); victims are the
+    least-recently-read HBM residents. A candidate never displaces a
+    page read at the same step (strict-inequality pairing), which is
+    ReactiveLRU's "never evict the ones just accessed" rule.
+    """
+
+    name = "recency"
+    window = 8
+
+    def __init__(self, *, cfg, geo):
+        super().__init__(cfg=cfg, geo=geo)
+        self._sparsity = cfg.attention_sparsity
+
+    def init_state(self, geo) -> Any:
+        shape = (geo.num_layers, geo.batch, geo.max_pages)
+        return {"last": jnp.full(shape, -1, jnp.int32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def plan(self, cache, state, active, budget,
+             read_mask=None) -> PlanResult:
+        alive = cache.page_table >= 0
+        if read_mask is not None:
+            read = read_mask & alive
+        elif self._sparsity > 0:
+            # standalone fallback (direct policy use outside the
+            # engine): approximate with the post-step mask
+            read = control.quest_page_mask(cache, self._sparsity)
+        else:
+            read = alive
+        step = state["step"] + 1
+        # unallocated pages forget their timestamp: when serve()
+        # releases a lane its page table clears, so a later request
+        # admitted into the same lane never inherits the evicted
+        # request's access history
+        last = jnp.where(read, step, jnp.where(alive, state["last"], -1))
+        scores = last.astype(jnp.float32)
+        host_score = control.slot_scores(scores, cache.host_owner)
+        hbm_score = control.slot_scores(scores, cache.hbm_owner)
+        # clamped at 0 so never-read pages (timestamp -1) don't qualify
+        # while the stream is younger than the window
+        thresh = jnp.maximum(step - self.window, 0).astype(jnp.float32)
+        plan, n_pro, n_dem = control.plan_by_score(
+            cache, host_score, hbm_score, budget=budget,
+            promote_thresh=thresh, active=active)
+        return plan, {"last": last, "step": step}, (n_pro, n_dem)
+
+
+@register("cost_aware")
+class CostAwarePolicy(DevicePolicy):
+    """Bandwidth-ratio hysteresis (live mirror of CostAwareHysteresis).
+
+    Promote threshold = `payback_threshold(spec, 1 / IMPORTANCE_EMA)`:
+    the attention-mass share at which keeping the page HBM-resident
+    over the EMA horizon repays one link crossing under the spec's
+    Eq.(3)/(4) constants. Residents above `demote_ratio` of that
+    threshold are protected from eviction — the hysteresis band that
+    keeps ReactiveLRU-style churn bounded.
+    """
+
+    name = "cost_aware"
+    demote_ratio = 0.25
+
+    def __init__(self, *, cfg, geo):
+        super().__init__(cfg=cfg, geo=geo)
+        self._t_promote = payback_threshold(cfg.spec, 1.0 / IMPORTANCE_EMA)
+        self._t_demote = self.demote_ratio * self._t_promote
+
+    def plan(self, cache, state, active, budget,
+             read_mask=None) -> PlanResult:
+        imp = cache.importance
+        host_score = control.slot_scores(imp, cache.host_owner)
+        hbm_imp = control.slot_scores(imp, cache.hbm_owner)
+        # residents warmer than the demote threshold are not victims
+        protected = (cache.hbm_owner >= 0) & (hbm_imp >= self._t_demote)
+        hbm_score = jnp.where(protected, _POS_INF, hbm_imp)
+        plan, n_pro, n_dem = control.plan_by_score(
+            cache, host_score, hbm_score, budget=budget,
+            promote_thresh=self._t_promote, active=active)
+        return plan, state, (n_pro, n_dem)
+
+
+@register("quest")
+class QuestPolicy(DevicePolicy):
+    """Promote exactly what the Quest top-k mask reads next (live
+    mirror of QuestPages).
+
+    The mask over the post-step cache is the page set the NEXT step's
+    attention will stream; host-resident members are promoted (hottest
+    first when over budget), mask-resident HBM pages are protected,
+    and the coldest non-mask residents make room. With sparsity 0 the
+    mask covers every alive page, so only free HBM slots are filled —
+    page-granularity prefetch degenerates to first-touch placement,
+    exactly as in the simulator baseline.
+    """
+
+    name = "quest"
+
+    def __init__(self, *, cfg, geo):
+        super().__init__(cfg=cfg, geo=geo)
+        self._sparsity = cfg.attention_sparsity
+
+    def plan(self, cache, state, active, budget,
+             read_mask=None) -> PlanResult:
+        # deliberately NOT read_mask (this step's reads): the policy
+        # prefetches for the NEXT read, so it ranks the mask over the
+        # post-step cache — the page set the next attention will want
+        mask = control.quest_page_mask(cache, self._sparsity)
+        imp = cache.importance
+        eo, ho = cache.host_owner, cache.hbm_owner
+        in_mask_host = jnp.take_along_axis(
+            mask, jnp.maximum(eo, 0), axis=-1) & (eo >= 0)
+        host_imp = control.slot_scores(imp, eo)
+        # candidates are the mask's host residents; +1 keeps every
+        # member above the 0.0 threshold (importance is nonnegative)
+        host_score = jnp.where(in_mask_host, 1.0 + host_imp, _NEG_INF)
+        in_mask_hbm = jnp.take_along_axis(
+            mask, jnp.maximum(ho, 0), axis=-1) & (ho >= 0)
+        hbm_imp = control.slot_scores(imp, ho)
+        hbm_score = jnp.where(in_mask_hbm, _POS_INF, hbm_imp)
+        plan, n_pro, n_dem = control.plan_by_score(
+            cache, host_score, hbm_score, budget=budget,
+            promote_thresh=0.0, active=active)
+        return plan, state, (n_pro, n_dem)

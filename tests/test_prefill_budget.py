@@ -1,0 +1,115 @@
+"""Per-BATCH prefill token budget (EngineConfig.prefill_budget).
+
+The ROADMAP PR 3 follow-up: `prefill_chunk` bounds each LANE's slice,
+but a wave of prefilling lanes still taxes every mixed step with a full
+prefill-plane execution. The token bucket caps the batch's aggregate
+prefill rate, so under a heavy wave most steps skip the prefill plane
+entirely (lax.cond) — decode TPOT improves while the wave's TTFT
+stretches. Greedy streams must be token-for-token unchanged: for them
+the budget is a SCHEDULE, not a semantic (sampled streams draw from a
+shifted point of the per-lane key chain, since keys advance every
+step and the budget moves the prefill-to-decode crossing).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.tiers import GH200
+from repro.models.model import Model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.get_smoke("internlm2-1.8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.key(0))
+
+
+def _engine(model, params, budget):
+    return ServingEngine(model, params, EngineConfig(
+        max_context=256, hbm_fraction=0.25, policy="importance",
+        attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4,
+        telemetry_stride=4, prefill_chunk=32, prefill_budget=budget))
+
+
+def _stream(vocab, *, waves=8):
+    """One decode-heavy request admitted first, then a heavy prefill
+    wave: more long prompts than spare lanes, so prefill demand
+    outlasts the decode request's lifetime."""
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=0, prompt=rng.integers(0, vocab, (16,)),
+                    max_new_tokens=40)]
+    reqs += [Request(rid=1 + i, prompt=rng.integers(0, vocab, (160,)),
+                     max_new_tokens=2)
+             for i in range(waves)]
+    return reqs
+
+
+def test_budget_validation(dense_model):
+    model, params = dense_model
+    with pytest.raises(ValueError, match="prefill_budget"):
+        ServingEngine(model, params, EngineConfig(prefill_budget=0))
+
+
+def test_budget_changes_schedule_not_tokens(dense_model):
+    """Greedy outputs must be bitwise identical with and without the
+    cap — each lane's tokens depend only on its own prompt and
+    history, and the bucket only re-times prefill slices."""
+    model, params = dense_model
+    outs = {}
+    for budget in (None, 32):
+        eng = _engine(model, params, budget)
+        report = eng.serve(_stream(model.cfg.vocab, waves=4),
+                           num_slots=4, seed=0)
+        outs[budget] = {r.rid: list(r.output) for r in report}
+        assert len(report) == 5
+    assert outs[None] == outs[32]
+
+
+def test_decode_tpot_improves_under_heavy_wave(dense_model):
+    """The backlog (25 x 160-token prompts through 3 spare lanes)
+    saturates prefill demand past the decode request's whole lifetime
+    in BOTH runs — uncapped, nearly every one of its decode steps pays
+    a full prefill-plane execution (3 staggered lanes leave few
+    prefill-free steps); capped at one lane-chunk per step (32 tokens
+    vs ~96 wanted), roughly two of three steps skip the plane via the
+    lax.cond. The decode request's measured TPOT must improve."""
+    model, params = dense_model
+
+    engines = {}
+    for budget in (None, 32):
+        engines[budget] = _engine(model, params, budget)
+        engines[budget].serve(_stream(model.cfg.vocab, waves=4),
+                              num_slots=4, seed=0)          # warm/compile
+
+    def measure(budget):
+        report = engines[budget].serve(
+            _stream(model.cfg.vocab, waves=25), num_slots=4, seed=0)
+        r = next(r for r in report if r.rid == 0)
+        assert len(r.output) == 40
+        return ((r.finished_at - r.first_token_at)
+                / (len(r.output) - 1),
+                max(x.finished_step for x in report))
+
+    # interleave the two arms and keep each arm's minimum: the serve
+    # schedule is deterministic and load spikes on shared CI runners
+    # only ever inflate wall time (and are correlated in time, so
+    # alternating arms exposes both to the same bursts) — the per-arm
+    # min is the clean estimate
+    best = {None: np.inf, 32: np.inf}
+    steps = {}
+    for _ in range(3):
+        for budget in (None, 32):
+            t, steps[budget] = measure(budget)
+            best[budget] = min(best[budget], t)
+    uncapped, capped = best[None], best[32]
+    steps_uncapped, steps_capped = steps[None], steps[32]
+    assert capped < uncapped, (capped, uncapped)
+    # ... and it is a TRADE, not a free lunch: the capped stream's
+    # prefill work spreads over strictly more steps, so the wave
+    # itself drains later (deterministic — a step count, not a clock)
+    assert steps_capped > steps_uncapped, (steps_capped, steps_uncapped)
