@@ -50,25 +50,43 @@ A sixth mode sweeps the POLICY PLANE (EXPERIMENTS.md §Policy-plane):
            one-executable-per-policy assert (swapping policies swaps a
            traced function, never the architecture).
 
-Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite). The headline
-is fused/host steps-per-second; fused executable counts are asserted to
-stay at one compile per scan length (zero migration-driven or
-admission-driven retraces).
+A seventh scores the bound where the serving traffic is
+(EXPERIMENTS.md §Serve-trace):
+
+  serve-sweep — every registered policy drives the same mixed
+           continuous-batching `serve` stream with `trace_telemetry`
+           on; the bridge stitches per-REQUEST traces across lane
+           reuse (`collect_serve`/`attribute`) and `score_serve`
+           reports the AGGREGATE stream's hit/bound fractions plus
+           each request's attributed fractions — the paper's headroom
+           under realistic multi-request load, not just isolated
+           decode. Asserted per policy: ONE serve executable with
+           capture on (telemetry adds zero retraces).
+
+Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite; the file is
+stamped with `schema_version` + the producing `commit` so trajectory
+tooling can parse it). The headline is fused/host steps-per-second;
+fused executable counts are asserted to stay at one compile per scan
+length (zero migration-driven or admission-driven retraces).
 
 Run:  PYTHONPATH=src python benchmarks/perf_engine.py
       PYTHONPATH=src python benchmarks/perf_engine.py --policy-sweep
-      (sweep only, full geometry)
+      (generate + serve policy sweeps only, full geometry)
 CI:   PYTHONPATH=src python benchmarks/perf_engine.py --ci
       (reduced geometry; additionally asserts fused >= eager steps/s,
       chunked-admission TTFT < eager-admission TTFT for the mid-stream
-      long prompt, one executable per device policy, and importance
-      hit fraction >= static hit fraction in the policy sweep)
+      long prompt, one executable per device policy — serve telemetry
+      included — importance hit fraction >= static in the policy
+      sweep, per-policy aggregate + per-request hit/bound fractions
+      present in the serve sweep, and the single-request serve bridge
+      bitwise equal to the generate bridge)
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import time
 
 import jax
@@ -89,6 +107,31 @@ from repro.serving.scheduler import Request
 STEPS = 64          # multiple of STRIDE: scan lengths compile once in warmup
 STRIDE = 32
 HOST_STEPS = 8          # the host baseline is too slow for more
+
+#: BENCH_engine.json layout version. Bump when keys move or change
+#: meaning; trajectory tooling keys off this + the `commit` stamp.
+#: v2: added serve_policy_sweep (aggregate + per-request fractions)
+#: and the schema_version/commit provenance stamp itself.
+BENCH_SCHEMA_VERSION = 2
+
+
+def _git_commit() -> str:
+    """Best-effort producing-commit stamp for BENCH_engine.json."""
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _stamp(result: dict) -> dict:
+    """Stamp schema version + producing commit onto a result dict."""
+    result["schema_version"] = BENCH_SCHEMA_VERSION
+    result["commit"] = _git_commit()
+    return result
 
 
 # --------------------------------------------------------------------------- #
@@ -398,6 +441,89 @@ def _policy_sweep(model, params, *, steps, ci):
     return sweep
 
 
+def _serve_policy_sweep(model, params, *, ci):
+    """Every registered device policy over the SAME mixed
+    continuous-batching serve stream, with per-request attribution
+    (see module doc / EXPERIMENTS.md §Serve-trace).
+
+    The stream's 272/288-token prompts spill past the 16-page per-lane
+    HBM pool (ctx 512) and Quest sparsity concentrates the decode read
+    set, so placement matters under lane churn: requests are admitted,
+    complete, and hand lanes to queued successors while the capture
+    runs. Returns {policy: {aggregate: {...}, requests: {rid: {...}},
+    serve_executables}}.
+    """
+    sa_cfg = SAConfig(max_evaluations=8 if ci else 24,
+                      iters_per_level=3 if ci else 8, seed=0)
+    rng = np.random.default_rng(0)
+    n_requests = 3 if ci else 6
+    prompts = [rng.integers(0, model.cfg.vocab, (272 + 16 * (i % 2),))
+               for i in range(n_requests)]
+
+    def mk():
+        return [Request(rid=i, prompt=p, max_new_tokens=6 + 2 * (i % 2))
+                for i, p in enumerate(prompts)]
+
+    sweep = {}
+    for name in policy_names():
+        eng = ServingEngine(model, params, EngineConfig(
+            max_context=512, hbm_fraction=0.25, policy=name,
+            attention_sparsity=0.5, spec=GH200, promote_thresh=1e-4,
+            telemetry_stride=8, prefill_chunk=16,
+            trace_telemetry=True))
+        report = eng.serve(mk(), num_slots=2, seed=0)
+        # serve telemetry adds ZERO retraces: one mixed-step executable
+        # per policy, capture on, across admission/reclaim/lane reuse
+        exes = eng._serve_jit._cache_size()
+        assert exes == 1, (name, exes)
+        rec = trace_bridge.collect_serve(eng)
+        score = trace_bridge.score_serve(rec, GH200, sa_cfg=sa_cfg,
+                                         report=report)
+        sweep[name] = {
+            "aggregate": score["aggregate"],
+            "requests": {str(rid): sc
+                         for rid, sc in score["requests"].items()},
+            "serve_executables": exes,
+        }
+        if ci:
+            agg = score["aggregate"]
+            assert agg["live_total_s"] > 0 and "bound_fraction" in agg, \
+                (name, agg)
+            assert len(score["requests"]) == n_requests, (name, score)
+            for sc in score["requests"].values():
+                assert {"hit_fraction", "bound_fraction"} <= set(sc), sc
+    return sweep
+
+
+def _assert_serve_bridge_matches_generate(model, params):
+    """CI pin: a single-request serve stream's stitched trace is
+    BITWISE the generate bridge's record (same access pattern, same
+    read-time placement, same prompt arithmetic) — the serve capture
+    is the same instrument pointed at the same program."""
+    rng = np.random.default_rng(11)
+    S, n = 32, 7
+    prompt = rng.integers(0, model.cfg.vocab, (S,))
+    cfg = EngineConfig(max_context=128, hbm_fraction=0.25,
+                       policy="importance", attention_sparsity=0.0,
+                       spec=GH200, promote_thresh=1e-4,
+                       telemetry_stride=4, prefill_chunk=16,
+                       trace_telemetry=True)
+    ref = ServingEngine(model, params, cfg)
+    logits0 = ref.start(jnp.asarray(prompt[None], jnp.int32))
+    tok0 = jnp.argmax(logits0, -1).astype(jnp.int32)
+    ref.generate(tok0, n - 1)
+    grec = trace_bridge.collect(ref)
+
+    eng = ServingEngine(model, params, cfg)
+    eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=n)],
+              num_slots=1)
+    atts = trace_bridge.attribute(trace_bridge.collect_serve(eng))
+    rec = atts[0].record
+    assert np.array_equal(rec.access, grec.access)
+    assert np.array_equal(rec.tier, grec.tier)
+    assert rec.prompt_len == grec.prompt_len
+
+
 def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     cfg = configs.get_smoke("internlm2-1.8b")
     model = Model(cfg)
@@ -497,8 +623,19 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
         rows.append((f"policy/{name}/bound_fraction", 0.0,
                      row["bound_fraction"]))
 
+    if ci:
+        _assert_serve_bridge_matches_generate(model, params)
+    serve_sweep = _serve_policy_sweep(model, params, ci=ci)
+    result["rows"]["serve_policy_sweep"] = serve_sweep
+    for name, row in serve_sweep.items():
+        agg = row["aggregate"]
+        rows.append((f"serve_policy/{name}/hit_fraction", 0.0,
+                     agg["live_hit_fraction"]))
+        rows.append((f"serve_policy/{name}/bound_fraction", 0.0,
+                     agg.get("bound_fraction", 0.0)))
+
     with open("BENCH_engine.json", "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(_stamp(result), f, indent=2)
     if print_csv:
         for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived:.3f}")
@@ -506,20 +643,24 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
 
 
 def run_policy_sweep(print_csv: bool = True, steps: int = STEPS):
-    """Standalone `--policy-sweep`: the policy plane only, full
-    geometry, appended into an existing BENCH_engine.json when present."""
+    """Standalone `--policy-sweep`: the policy plane only — generate
+    streams AND the serve-stream sweep with per-request attribution —
+    full geometry, appended into an existing BENCH_engine.json when
+    present."""
     cfg = configs.get_smoke("internlm2-1.8b")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     sweep = _policy_sweep(model, params, steps=steps, ci=False)
+    serve_sweep = _serve_policy_sweep(model, params, ci=False)
     try:
         with open("BENCH_engine.json") as f:
             result = json.load(f)
     except (OSError, ValueError):
         result = {"rows": {}}
     result.setdefault("rows", {})["policy_sweep"] = sweep
+    result["rows"]["serve_policy_sweep"] = serve_sweep
     with open("BENCH_engine.json", "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(_stamp(result), f, indent=2)
     if print_csv:
         for name, row in sweep.items():
             print(f"policy/{name}/steps_per_s,"
@@ -529,7 +670,13 @@ def run_policy_sweep(print_csv: bool = True, steps: int = STEPS):
                   f"{row['hit_fraction']:.3f}")
             print(f"policy/{name}/bound_fraction,0.000,"
                   f"{row['bound_fraction']:.3f}")
-    return sweep
+        for name, row in serve_sweep.items():
+            agg = row["aggregate"]
+            print(f"serve_policy/{name}/hit_fraction,0.000,"
+                  f"{agg['live_hit_fraction']:.3f}")
+            print(f"serve_policy/{name}/bound_fraction,0.000,"
+                  f"{agg.get('bound_fraction', 0.0):.3f}")
+    return sweep, serve_sweep
 
 
 if __name__ == "__main__":

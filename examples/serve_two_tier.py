@@ -7,7 +7,10 @@ device placement policy (static / importance / recency / cost_aware /
 quest) with Quest-style sparsity, scoring each against the paper's SA
 upper bound via the live-telemetry simulator bridge — then
 `ServingEngine.serve`: a mixed-length request stream continuously
-batched through the same fused decode loop with on-device sampling.
+batched through the same fused decode loop with on-device sampling
+and serve-stream trace capture, so every REQUEST comes back with its
+own attributed hit/bound fractions and the stream reports its
+aggregate headroom (EXPERIMENTS.md §Serve-trace).
 
 Run:  PYTHONPATH=src python examples/serve_two_tier.py
 """
@@ -70,14 +73,17 @@ def main():
               f"  of-SA-bound={score['bound_fraction']:.2f}"
               f"  migrated={s['migrated_bytes'] / 1e6:.1f}MB")
 
-    # --- continuous batching: a live request stream through serve() ------
+    # --- continuous batching: a live request stream through serve(),
+    # with serve-stream trace capture + per-request attribution --------
     eng = ServingEngine(model, state.params, EngineConfig(
         max_context=256, hbm_fraction=0.25, policy="importance",
-        attention_sparsity=0.0, spec=GH200, promote_thresh=0.005,
-        telemetry_stride=8))
+        attention_sparsity=0.5, spec=GH200, promote_thresh=0.005,
+        telemetry_stride=8, trace_telemetry=True))
+    # 272-304-token prompts spill past the 16-page (256-token) per-lane
+    # HBM pool, so per-request placement quality actually varies
     stream = [Request(rid=rid,
                       prompt=rng.integers(0, cfg.vocab,
-                                          (32 + 16 * (rid % 3),)),
+                                          (272 + 16 * (rid % 3),)),
                       max_new_tokens=8 + 4 * (rid % 3))
               for rid in range(10)]
     done = eng.serve(stream, num_slots=4,
@@ -96,6 +102,21 @@ def main():
               f"p95={done.tpot['p95'] * 1e3:.2f}ms")
     first = min(done, key=lambda r: r.rid)
     print(f"  rid=0 sampled: {first.output}")
+
+    # the serve-trace bridge: stitch each request's decode stream out
+    # of the shared batch and score it (and the aggregate) against the
+    # SA bound — placement quality per REQUEST, under real lane churn
+    rec = trace_bridge.collect_serve(eng)
+    trace_bridge.score_serve(rec, GH200, sa_cfg=sa_cfg, report=done)
+    agg = done.headroom
+    print(f"  stream headroom: hit={agg['live_hit_fraction']:.2f} "
+          f"of-SA-bound={agg['bound_fraction']:.2f} over "
+          f"{agg['requests']:.0f} requests / {agg['decode_steps']:.0f} "
+          f"decode steps")
+    for rid in sorted(done.request_scores):
+        sc = done.request_scores[rid]
+        print(f"    rid={rid:2d} hit={sc['hit_fraction']:.2f} "
+              f"of-SA-bound={sc['bound_fraction']:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,84 @@
+"""Execute the README's quickstart: every fenced ```bash block, line
+by line, from the repo root.
+
+The docs CI job runs this so the README can never drift from a
+runnable state — if a quickstart command breaks or is renamed, the
+docs gate fails the PR, not a user's first five minutes with the
+repo. Comment lines inside the blocks are skipped; each command runs
+with PYTHONPATH=src prepended to the environment (the README commands
+set it inline too, so they also work copy-pasted).
+
+Run:  python scripts/check_readme.py [--list] [README.md ...]
+      --list prints the extracted commands without executing them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_commands(path: str) -> list:
+    """The non-comment lines of every ```bash fence, in order."""
+    commands = []
+    lang = None
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            m = _FENCE.match(line.strip())
+            if m:
+                lang = m.group(1) if lang is None else None
+                continue
+            if lang == "bash":
+                cmd = line.rstrip()
+                if cmd and not cmd.lstrip().startswith("#"):
+                    commands.append(cmd)
+    return commands
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*",
+                    default=[os.path.join(REPO_ROOT, "README.md")])
+    ap.add_argument("--list", action="store_true",
+                    help="print the extracted commands, don't run them")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    src = os.path.join(REPO_ROOT, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+
+    commands = []
+    for path in args.files:
+        got = extract_commands(path)
+        if not got:
+            print(f"error: no ```bash blocks found in {path}")
+            return 2
+        commands += got
+    if args.list:
+        print("\n".join(commands))
+        return 0
+
+    for cmd in commands:
+        print(f"$ {cmd}", flush=True)
+        t0 = time.time()
+        proc = subprocess.run(cmd, shell=True, cwd=REPO_ROOT, env=env)
+        dt = time.time() - t0
+        if proc.returncode != 0:
+            print(f"FAILED ({proc.returncode}) after {dt:.0f}s: {cmd}")
+            return proc.returncode
+        print(f"ok ({dt:.0f}s)", flush=True)
+    print(f"README quickstart green: {len(commands)} commands")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,8 @@
+"""Live serving stack: the fused two-tier decode engine, its pluggable
+device placement policies, continuous-batching scheduler, on-device
+sampling, and the telemetry bridge to the placement simulator. See
+EXPERIMENTS.md (§Fused-engine through §Serve-trace) for architecture."""
+
 from repro.serving.engine import ServingEngine, EngineConfig, StepStats
 from repro.serving.policies import (
     DevicePolicy, make_policy, policy_names, register,

@@ -289,6 +289,24 @@ def insert_lane(cache: PagedKVCache, lane_cache: PagedKVCache,
         importance=ins1(cache.importance, lane_cache.importance))
 
 
+def page_tiers(cache: PagedKVCache) -> jax.Array:
+    """Read-time placement codes, int8 [L, B, max_pages]: 0 = HBM,
+    1 = host DRAM, -1 = unallocated (`core.placement.base` tier codes).
+
+    The batched telemetry channel of the trace bridge: sampled
+    post-decode / pre-migration inside the fused step, this is the
+    placement the step's attention reads actually hit — `generate`
+    capture keeps lane 0, `serve` capture keeps every lane so the
+    bridge can attribute per-request streams (see
+    `repro.serving.trace_bridge`).
+    """
+    slot = cache.page_table                                 # [L, B, P]
+    hbm_pages = cache.k_hbm.shape[2]
+    return jnp.where(
+        slot < 0, jnp.int8(-1),
+        jnp.where(slot < hbm_pages, jnp.int8(0), jnp.int8(1)))
+
+
 def occupancy(cache: PagedKVCache) -> jax.Array:
     """[2] int32: resident page counts (HBM, host) summed over [L, B] —
     the per-step read traffic in pages for Eq. (3)/(4) telemetry."""

@@ -51,8 +51,11 @@ quest — plans through the same fixed-capacity `control.plan_by_score`
 core and threads its own (statically shaped) state through the scan,
 so each policy runs the full serve stream on ONE compiled executable.
 `EngineConfig.trace_telemetry` additionally captures per-step page
-accesses + placements, which `repro.serving.trace_bridge` converts
-into simulator traces and scores against the paper's SA upper bound.
+accesses + placements — lane 0 for the single-stream modes, every lane
+(plus lane->request bindings) for `serve` — which
+`repro.serving.trace_bridge` converts into simulator traces (stitched
+per request for serve streams) and scores against the paper's SA upper
+bound.
 """
 
 from __future__ import annotations
@@ -80,6 +83,13 @@ from repro.serving.scheduler import ContinuousBatcher, Request
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Static engine configuration, baked into the jitted step
+    functions at build time (changing any field recompiles once; no
+    field may change mid-stream). Selects the cache geometry split
+    (`max_context`, `hbm_fraction`), the placement policy and its
+    knobs, attention sparsity, the fused-scan stride, chunked-prefill
+    budgets, EOS, and trace capture."""
+
     max_context: int = 512
     hbm_fraction: float = 0.25
     policy: str = "importance"
@@ -113,16 +123,24 @@ class EngineConfig:
     prefill_budget: Optional[int] = None
     #: stop token for `serve` (None = budget-only completion)
     eos_id: Optional[int] = None
-    #: capture per-step (page access, read-time placement) telemetry of
-    #: batch lane 0 for the simulator bridge
-    #: (`repro.serving.trace_bridge`). Supported by the step/run/
-    #: generate drive modes; `serve` rejects it (per-lane streams
-    #: overlap there, so a single-lane trace would be meaningless).
+    #: capture per-step (page access, read-time placement) telemetry
+    #: for the simulator bridge (`repro.serving.trace_bridge`).
+    #: step/run/generate keep batch lane 0 (`trace_bridge.collect`);
+    #: `serve` keeps EVERY lane plus its chunk's lane->request bindings
+    #: so the bridge can stitch per-REQUEST traces across admission/
+    #: reclaim boundaries (`trace_bridge.collect_serve`/`attribute`).
+    #: Pure observation: tokens, StepStats, and executable counts are
+    #: identical with capture on or off.
     trace_telemetry: bool = False
 
 
 @dataclasses.dataclass
 class StepStats:
+    """One decode step's modeled cost under the paper's Eq. (1)-(5):
+    the latency and the byte volumes (HBM / host reads, migrations in /
+    out) the engine's device telemetry priced for that step, plus the
+    step's HBM hit rate (fraction of read bytes served from HBM)."""
+
     modeled_latency_s: float
     h_read: float
     e_read: float
@@ -138,13 +156,29 @@ class ServeReport:
     `submitted_at` to the boundary where the on-device first token is
     read back, TPOT as decode seconds per token after the first.
     Sequence-like over `completed`, so `for r in report` / `report[0]`
-    / `len(report)` keep working at PR 2 call sites."""
+    / `len(report)` keep working at PR 2 call sites.
+
+    When the stream ran with `EngineConfig.trace_telemetry` and the
+    bridge scored it (`trace_bridge.score_serve(..., report=...)`),
+    `request_scores` maps each request id to its attributed placement
+    scores (`hit_fraction`, `bound_fraction`, ...) and `headroom`
+    carries the aggregate stream's live-vs-SA-bound summary. Both stay
+    empty otherwise — scoring replays the SA oracle and is a
+    deliberate post-pass, not part of the serve hot loop."""
+
     completed: List[Request]
     ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
     tpot: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: rid -> per-request attribution scores (trace_bridge.score_serve)
+    request_scores: Dict[int, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
+    #: aggregate stream headroom (live vs SA/Belady/static totals)
+    headroom: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def build(completed: List[Request]) -> "ServeReport":
+        """Assemble a report from completed requests: TTFT/TPOT
+        mean/p50/p95 from their wall-clock stamps."""
         def pct(vals):
             if not vals:
                 return {}
@@ -184,6 +218,16 @@ def _set_cache(state, cache):
 
 
 class ServingEngine:
+    """The live serving engine over the two-tier paged KV cache.
+
+    Owns the jitted fused step (control plane + decode + migration, see
+    the module docstring) and exposes the drive modes: eager `step`,
+    fused `run`/`generate`, and the continuous-batching `serve`. Device
+    telemetry is priced per step into `self.stats` (`StepStats`,
+    Eq. (1)-(5)); with `EngineConfig.trace_telemetry` the raw page
+    access/placement stream is additionally kept for the simulator
+    bridge (`repro.serving.trace_bridge`)."""
+
     def __init__(self, model: Model, params, cfg: EngineConfig):
         if cfg.policy not in policy_names():
             raise ValueError(
@@ -204,6 +248,10 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
     def start(self, prompts: jax.Array, extra=None):
+        """Prefill `prompts` [B, S] into a fresh cache and return the
+        last-position logits; resets stats and any captured trace.
+        The single-stream entry point — `serve` manages its own cache
+        and admission, `start` is for step/run/generate driving."""
         geo = self.model.cache_geometry(
             prompts.shape[0], self.cfg.max_context,
             hbm_fraction=self.cfg.hbm_fraction)
@@ -279,14 +327,12 @@ class ServingEngine:
             moves = jnp.stack([n_pro, n_dem]).astype(jnp.int32)
             base = jnp.concatenate([occ, moves])
             if capture:
-                # lane 0's read-time placement (post-decode so the
-                # step's fresh page is included, pre-migration)
-                slot = cache.page_table[:, 0]                  # [L, P]
-                hbm_pages = cache.k_hbm.shape[2]
-                tier = jnp.where(
-                    slot < 0, jnp.int8(-1),
-                    jnp.where(slot < hbm_pages, jnp.int8(0), jnp.int8(1)))
-                stats = (base, read[:, 0], tier)
+                # full-batch read set + read-time placement (post-decode
+                # so the step's fresh page is included, pre-migration).
+                # `_record` keeps lane 0 for the generate bridge; the
+                # serve capture keeps every lane for per-request
+                # attribution (trace_bridge.collect_serve).
+                stats = (base, read, control.page_tiers(cache))
             else:
                 stats = (base,)
             state = _set_cache(state, apply_migrations(cache, plan))
@@ -363,15 +409,31 @@ class ServingEngine:
                     return step_fn(params, args[0], args[1], args[2], dec)
 
                 def skip_dec(args):
-                    occ = control.occupancy(_get_cache(args[0]))
+                    c = _get_cache(args[0])
+                    occ = control.occupancy(c)
                     vocab = pf_logits_sds.shape[-1]
+                    base = jnp.concatenate([occ,
+                                            jnp.zeros((2,), jnp.int32)])
+                    if capture:
+                        # pure-prefill step: no decode reads. The tier
+                        # snapshot keeps the ys pytree static; the
+                        # bridge drops these rows (no lane emitted).
+                        nostats = (base,
+                                   jnp.zeros(c.page_table.shape, bool),
+                                   control.page_tiers(c))
+                    else:
+                        nostats = (base,)
                     return (jnp.zeros((B, vocab), pf_logits_sds.dtype),
-                            args[0], args[1],
-                            (jnp.concatenate(
-                                [occ, jnp.zeros((2,), jnp.int32)]),))
+                            args[0], args[1], nostats)
 
                 logits, st, ps, stats = jax.lax.cond(
                     dec.any(), run_dec, skip_dec, (st, ps, tok))
+                if capture:
+                    # decode-plane attribution only: a lane's reads
+                    # count while it DECODES — prefilling lanes' pages
+                    # are write traffic, not part of the access model
+                    stats = (stats[0], stats[1] & dec[None, :, None],
+                             stats[2])
                 ks, sub = split_lanes(ks)
                 nxt = sampler(logits, sub)
                 rem = rem - dec.astype(rem.dtype)
@@ -539,6 +601,16 @@ class ServingEngine:
         Returns a `ServeReport`: completed requests (token ids in
         `req.output`) plus TTFT/TPOT percentiles from the per-request
         wall-clock stamps.
+
+        With `EngineConfig.trace_telemetry` the chunk additionally
+        reads back every lane's page read set and read-time placement
+        (decode plane only — prefill writes never enter the access
+        model) stamped with the chunk's lane->request bindings;
+        `trace_bridge.collect_serve`/`attribute` stitch those into
+        per-request simulator traces and `trace_bridge.score_serve`
+        scores the stream (and each request) against the SA upper
+        bound. Capture is pure observation: tokens, StepStats, and the
+        one-executable-per-stream property are unchanged.
         """
         cfg = self.cfg
         fam = self.model.cfg.family
@@ -547,11 +619,6 @@ class ServingEngine:
                 f"serve() drives cache-backed decode states (dense/moe); "
                 f"family {fam!r} needs prefill extras or recurrent-state "
                 f"lane insertion")
-        if cfg.trace_telemetry:
-            raise NotImplementedError(
-                "trace_telemetry captures a single lane's stream; serve "
-                "overlaps per-lane streams — drive step/run/generate "
-                "for the simulator bridge instead")
         if not requests:
             return ServeReport(completed=[])
         B = num_slots if num_slots is not None else min(len(requests), 4)
@@ -575,6 +642,9 @@ class ServingEngine:
         self._ensure_step_fns()
         pstate = self._policy.init_state(geo)
         credits = jnp.zeros((), jnp.int32)   # prefill token bucket
+        #: per-chunk (access, tier, emitted, first, rids, prompt_len)
+        #: when cfg.trace_telemetry (trace_bridge.collect_serve)
+        self._serve_trace_log = []
 
         pool = total_pages if total_pages is not None \
             else B * geo.max_pages
@@ -636,6 +706,14 @@ class ServingEngine:
             # prefill-only steps (first tokens included) are charged to
             # the prefill stage, matching the simulator's convention
             self._record((np.asarray(stats[0])[emitted.max(axis=1) >= 0],))
+            if len(stats) == 3:
+                # serve trace capture: the full-batch read set + tiers,
+                # stamped with the chunk's lane->request bindings (fixed
+                # within a chunk: admission only happens at boundaries)
+                self._serve_trace_log.append(
+                    (np.asarray(stats[1]), np.asarray(stats[2]),
+                     emitted, first, view.rids.copy(),
+                     view.prompt_len.copy()))
             # per-step wall-clock stamps: the chunk's device events are
             # observed at the boundary, so spread its wall time evenly
             # over the stride — TTFT/TPOT then resolve WITHIN a chunk
@@ -699,13 +777,18 @@ class ServingEngine:
     # telemetry (host side, Eq. (1)-(5) pricing)
     # ------------------------------------------------------------------ #
     def _record(self, stats):
-        """stats: a tuple off the device — `(base,)` or, with
+        """Price a batch of per-step device telemetry into `self.stats`.
+
+        stats: a tuple off the device — `(base,)` or, with
         `cfg.trace_telemetry`, `(base, access, tier)` where base is
         [n, 4] int32 rows of (hbm_pages, host_pages, promotes, demotes)
-        and access/tier are lane 0's per-step [n, L, P] page read set
-        and placement (kept raw for trace_bridge.collect)."""
+        and access/tier are the per-step [n, L, B, P] page read set and
+        placement; lane 0 is kept raw for the single-stream bridge
+        (`trace_bridge.collect` — serve capture goes through
+        `_serve_trace_log` instead, with all lanes)."""
         if len(stats) == 3:
-            self._trace_log.append(stats)
+            self._trace_log.append(
+                (stats[0], stats[1][:, :, 0], stats[2][:, :, 0]))
         stats = stats[0]
         geo = self.geo
         pb = geo.page_bytes()
@@ -725,6 +808,8 @@ class ServingEngine:
                 hbm_hit_rate=traffic["h_read"] / denom if denom else 1.0))
 
     def summary(self) -> Dict[str, float]:
+        """Aggregate the recorded StepStats: step count, modeled total
+        seconds and tokens/s, mean HBM hit rate, migrated bytes."""
         if not self.stats:
             return {}
         lat = np.array([s.modeled_latency_s for s in self.stats])

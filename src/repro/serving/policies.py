@@ -89,7 +89,26 @@ class DevicePolicy:
 
     def plan(self, cache: PagedKVCache, state: Any, active, budget: int,
              read_mask=None) -> PlanResult:
+        """One planning step -> (MigrationPlan, state, (n_pro, n_dem)).
+
+        See the module docstring for the contract; subclasses must keep
+        the plan capacity at the geometry constant and all state shapes
+        static."""
         raise NotImplementedError
+
+
+def check_read_mask(cache: PagedKVCache, read_mask) -> None:
+    """Trace-time consistency check for the engine-supplied read set.
+
+    `read_mask` is PER-LANE ([L, B, max_pages], matching the page
+    table): each batch lane's column is that lane's own access stream.
+    The serve-trace capture gates the same tensor by the decoding-lane
+    mask before attribution, so a shape mismatch here would silently
+    desynchronize policies from the telemetry the bridge scores —
+    fail at trace time instead. No-op when the mask is absent."""
+    assert read_mask is None or \
+        read_mask.shape == cache.page_table.shape, \
+        (read_mask.shape, cache.page_table.shape)
 
 
 _REGISTRY: Dict[str, Callable[..., DevicePolicy]] = {}
@@ -106,6 +125,8 @@ def register(name: str):
 
 
 def policy_names() -> Tuple[str, ...]:
+    """The registered device-policy names, sorted (the valid values of
+    `EngineConfig.policy`)."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -133,6 +154,8 @@ class StaticPolicy(DevicePolicy):
 
     def plan(self, cache, state, active, budget,
              read_mask=None) -> PlanResult:
+        """Plan nothing: an all-sentinel fixed-capacity plan."""
+        check_read_mask(cache, read_mask)
         L, B, _ = cache.hbm_owner.shape
         zero = jnp.zeros((), jnp.int32)
         return MigrationPlan.empty(L * B * budget), state, (zero, zero)
@@ -151,6 +174,8 @@ class ImportancePolicy(DevicePolicy):
 
     def plan(self, cache, state, active, budget,
              read_mask=None) -> PlanResult:
+        """Promote the hottest host pages by importance EMA."""
+        check_read_mask(cache, read_mask)
         plan, n_pro, n_dem = control.plan_migrations(
             cache, budget=budget, promote_thresh=self._thresh,
             active=active)
@@ -180,12 +205,15 @@ class RecencyPolicy(DevicePolicy):
         self._sparsity = cfg.attention_sparsity
 
     def init_state(self, geo) -> Any:
+        """Per-page last-access timestamps (-1 = never) + step count."""
         shape = (geo.num_layers, geo.batch, geo.max_pages)
         return {"last": jnp.full(shape, -1, jnp.int32),
                 "step": jnp.zeros((), jnp.int32)}
 
     def plan(self, cache, state, active, budget,
              read_mask=None) -> PlanResult:
+        """Promote recently read host pages, evict LRU residents."""
+        check_read_mask(cache, read_mask)
         alive = cache.page_table >= 0
         if read_mask is not None:
             read = read_mask & alive
@@ -235,6 +263,8 @@ class CostAwarePolicy(DevicePolicy):
 
     def plan(self, cache, state, active, budget,
              read_mask=None) -> PlanResult:
+        """Promote pages whose attention mass repays the link cost."""
+        check_read_mask(cache, read_mask)
         imp = cache.importance
         host_score = control.slot_scores(imp, cache.host_owner)
         hbm_imp = control.slot_scores(imp, cache.hbm_owner)
@@ -269,6 +299,8 @@ class QuestPolicy(DevicePolicy):
 
     def plan(self, cache, state, active, budget,
              read_mask=None) -> PlanResult:
+        """Prefetch the next step's Quest top-k read set into HBM."""
+        check_read_mask(cache, read_mask)
         # deliberately NOT read_mask (this step's reads): the policy
         # prefetches for the NEXT read, so it ranks the mask over the
         # post-step cache — the page set the next attention will want

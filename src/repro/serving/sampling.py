@@ -39,6 +39,11 @@ def lane_key(root: jax.Array, rid) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class SamplingConfig:
+    """Static sampling knobs baked into the fused serve executable.
+
+    The default (temperature 0) is greedy argmax — bitwise the
+    `generate` path; any change recompiles the serve loop once."""
+
     #: 0.0 = greedy argmax (the exact `generate` path)
     temperature: float = 0.0
     #: keep only the k most likely tokens (0 = off)

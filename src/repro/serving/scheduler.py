@@ -55,6 +55,12 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: identity (`rid`), prompt, decode budget,
+    and the per-run mutable bookkeeping the scheduler/engine stamp
+    onto it (lane binding, phase, generated tokens, wall-clock
+    latency marks). Reset on every `ContinuousBatcher.submit`, so a
+    Request object can be re-submitted across serve calls."""
+
     rid: int
     prompt_len: int = 0
     max_new_tokens: int = 16
@@ -88,16 +94,21 @@ class Request:
 
     @property
     def pages_needed(self) -> int:
+        """KV pages this request needs end-to-end (prompt + full decode
+        budget), under the page size stamped at submit."""
         return -(-(self.prompt_len + self.max_new_tokens)
                  // self.page_tokens)
 
 
 @dataclasses.dataclass
 class SlotState:
+    """One batch slot: the live request bound to it, or None if free."""
+
     request: Optional[Request] = None
 
     @property
     def free(self) -> bool:
+        """Whether the slot can accept an admission."""
         return self.request is None
 
 
@@ -117,6 +128,11 @@ class DeviceView:
 
 
 class ContinuousBatcher:
+    """Fixed-slot continuous-batching scheduler over the paged cache
+    (admission / completion / fairness — see the module docstring).
+    Pure control plane: never touches arrays; the engine drives it via
+    `admit`/`complete`/`device_view` at chunk boundaries."""
+
     def __init__(self, num_slots: int, total_pages: int,
                  page_tokens: int = 16, max_skips: int = 8):
         self.slots: List[SlotState] = [SlotState() for _ in range(num_slots)]
@@ -127,9 +143,19 @@ class ContinuousBatcher:
         self.max_skips = max_skips
         self.step_idx = 0
         self.completed: List[Request] = []
+        #: lane<->request attribution ledger: one row per admission,
+        #: in admission order. Lane indices are REUSED across the
+        #: stream, so request identity over time comes from these
+        #: bindings (+ the per-chunk `DeviceView.rids` stamps the
+        #: engine logs) — the trace bridge's per-request stitching
+        #: relies on exactly this: a lane's telemetry belongs to
+        #: whichever request was bound at that step, never to the
+        #: lane number itself.
+        self.bindings: List[Dict[str, int]] = []
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
+        """Queue a request (FIFO) and reset its per-run state."""
         req.page_tokens = self.page_tokens
         req.arrived_step = self.step_idx
         # reset per-run mutable state so a Request object can be
@@ -166,6 +192,10 @@ class ContinuousBatcher:
                 req.started_step = self.step_idx
                 req.phase = "prefilling"
                 self.free_pages -= req.pages_needed
+                self.bindings.append({
+                    "rid": req.rid, "lane": lane,
+                    "admitted_step": self.step_idx,
+                    "released_step": -1})
                 admitted.append(req)
             else:
                 requeue.append(req)
@@ -178,6 +208,10 @@ class ContinuousBatcher:
         """Release a live request's slot and pages (engine-driven
         completion: EOS or budget, observed on device)."""
         assert req.lane >= 0 and self.slots[req.lane].request is req, req
+        for b in reversed(self.bindings):
+            if b["rid"] == req.rid and b["released_step"] < 0:
+                b["released_step"] = self.step_idx
+                break
         self.slots[req.lane].request = None
         self.free_pages += req.pages_needed
         req.finished_step = self.step_idx
@@ -188,6 +222,8 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------ #
     def device_view(self) -> DeviceView:
+        """Export the per-slot arrays the fused serve chunk carries
+        (active/remaining/rids/prompt_len/prefilled + lane bindings)."""
         n = len(self.slots)
         active = np.zeros((n,), bool)
         remaining = np.zeros((n,), np.int32)
@@ -211,6 +247,7 @@ class ContinuousBatcher:
 
     @property
     def has_work(self) -> bool:
+        """Whether anything is queued or still live in a slot."""
         return bool(self.queue) or any(not s.free for s in self.slots)
 
     # ------------------------------------------------------------------ #
@@ -233,8 +270,10 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------ #
     def utilization(self) -> float:
+        """Fraction of batch slots holding a live request."""
         live = sum(0 if s.free else 1 for s in self.slots)
         return live / len(self.slots)
 
     def page_pressure(self) -> float:
+        """Fraction of the KV page pool currently reserved."""
         return 1.0 - self.free_pages / self.total_pages

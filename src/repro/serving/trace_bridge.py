@@ -28,12 +28,27 @@ The static baseline doubles as the bridge's self-test: live static
 placement and simulated static placement are the same deterministic
 rule, so their scores must agree to float tolerance
 (tests/test_trace_bridge.py pins this).
+
+Serve streams (PR 5) go through the same loop under continuous
+batching, where placement pressure actually comes from lane churn and
+admission: with `trace_telemetry` the mixed prefill+decode chunk emits
+EVERY lane's read set + read-time placement (decode plane only, so
+prefill writes never enter the access model), stamped with the chunk's
+lane->request bindings. `collect_serve` stacks the chunks,
+`attribute` stitches each REQUEST's rows — lane indices are reused
+across admissions, so identity comes from the scheduler's bindings,
+never the lane number — into a per-request `TelemetryRecord`, and
+`score_serve` prices both the aggregate stream (per-lane traffic
+summed per step before the Eq. (2) max, exactly how per-layer traffic
+already aggregates) and each request in isolation against SA / Belady
+/ static under the live per-layer HBM budget. See
+EXPERIMENTS.md §Serve-trace.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -66,14 +81,17 @@ class TelemetryRecord:
 
     @property
     def num_steps(self) -> int:
+        """Decode steps captured in this record."""
         return self.access.shape[0]
 
     @property
     def num_layers(self) -> int:
+        """Attention layers captured per step."""
         return self.access.shape[1]
 
     @property
     def num_pages(self) -> int:
+        """Logical page slots per layer (the cache's max_pages)."""
         return self.access.shape[2]
 
 
@@ -195,21 +213,264 @@ def score_headroom(rec: TelemetryRecord, spec, *,
         "live_total_s": live_total,
         "live_hit_fraction": hit_fraction(rec),
     }
-    wl = Workload(bytes_per_token_layer=rec.page_bytes // rec.page_tokens,
-                  num_layers=1)
-    budget_bytes = float(rec.hbm_pages * rec.page_bytes)
-    traces = [layer_trace(rec, layer) for layer in range(rec.num_layers)]
     names = dict.fromkeys(tuple(oracles) + ("static",))   # ordered dedupe
     for name in names:
-        agg: Optional[StepTraffic] = None
-        for tr in traces:
-            res = run_strategy(name, tr, spec, wl, budget_bytes,
-                               sa_cfg=sa_cfg)
-            agg = res.step_traffic if agg is None \
-                else agg + res.step_traffic
+        agg = oracle_traffic(rec, name, spec, sa_cfg=sa_cfg)
         out[f"{name}_total_s"] = float(np.sum(step_latency(agg, spec)))
     if live_total > 0:
         if "sa" in oracles:
             out["bound_fraction"] = out["sa_total_s"] / live_total
         out["headroom_vs_static"] = out["static_total_s"] / live_total
     return out
+
+
+def oracle_traffic(rec: TelemetryRecord, name: str, spec, *,
+                   sa_cfg=None) -> StepTraffic:
+    """Per-step traffic of oracle `name` replayed on `rec`'s bridged
+    traces under the live per-layer HBM page budget, summed over layers
+    (layers execute within one decode step, so their volumes add before
+    the Eq. (2) max). The building block `score_headroom` and
+    `score_serve` share, exposed so callers can re-aggregate across
+    requests before pricing."""
+    wl = Workload(bytes_per_token_layer=rec.page_bytes // rec.page_tokens,
+                  num_layers=1)
+    budget_bytes = float(rec.hbm_pages * rec.page_bytes)
+    agg: Optional[StepTraffic] = None
+    for layer in range(rec.num_layers):
+        res = run_strategy(name, layer_trace(rec, layer), spec, wl,
+                           budget_bytes, sa_cfg=sa_cfg)
+        agg = res.step_traffic if agg is None else agg + res.step_traffic
+    return agg
+
+
+# --------------------------------------------------------------------------
+# serve streams: capture, per-request stitching, and attribution scoring
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeTraceRecord:
+    """A full continuous-batching serve stream's decode-plane telemetry.
+
+    Per captured step s and batch lane b:
+
+    access[s, l, b, p]:  layer l of lane b read logical page p while
+                         DECODING at step s (prefilling / inactive
+                         lanes contribute no reads — prefill writes are
+                         outside the access model).
+    tier[s, l, b, p]:    page p's read-time placement (post-decode,
+                         pre-migration) — HBM / DRAM / UNALLOC codes.
+    emitted[s, b]:       the token lane b decoded at step s, -1 if the
+                         lane did not decode (prefilling, crossing, or
+                         idle). The stitching predicate.
+    first[s, b]:         the first token sampled at lane b's
+                         prefill->decode crossing, -1 elsewhere
+                         (a prefill-plane event, excluded from traces).
+    rids[s, b]:          the request bound to lane b during step s's
+                         chunk, -1 when the lane is free. Lane indices
+                         are REUSED across admissions; this is the
+                         identity channel.
+    prompt_len[s, b]:    the bound request's prompt length in tokens.
+    """
+
+    access: np.ndarray       # bool  [S, L, B, P]
+    tier: np.ndarray         # int8  [S, L, B, P]
+    emitted: np.ndarray      # int32 [S, B]
+    first: np.ndarray        # int32 [S, B]
+    rids: np.ndarray         # int32 [S, B]
+    prompt_len: np.ndarray   # int32 [S, B]
+    page_tokens: int
+    page_bytes: int          # per-layer bytes of one page
+    hbm_pages: int           # per-layer HBM slots (the live budget)
+
+    @property
+    def num_steps(self) -> int:
+        """Captured serve steps (prefill-only steps included)."""
+        return self.access.shape[0]
+
+    @property
+    def num_lanes(self) -> int:
+        """Batch lanes (serve slots) in the stream."""
+        return self.access.shape[2]
+
+
+@dataclasses.dataclass
+class RequestAttribution:
+    """One request's stitched slice of a serve stream.
+
+    `record` is the request's decode stream in exactly the shape the
+    single-stream bridge emits (so `layer_trace` / `live_traffic` /
+    `score_headroom` apply verbatim); `rows` maps each of its steps
+    back to the global serve step axis (for cross-request aggregation)
+    and `lanes` names the lane it occupied there. `record.moves` is
+    recovered from tier transitions — the planner's counts aggregate
+    over lanes and cannot be attributed per request."""
+
+    rid: int
+    record: TelemetryRecord
+    rows: np.ndarray         # int64 [S_r] global serve step indices
+    lanes: np.ndarray        # int64 [S_r] lane occupied at each row
+
+
+def collect_serve(engine) -> ServeTraceRecord:
+    """Stack a serve stream's captured telemetry chunks into one record.
+
+    Drive pattern: construct the engine with
+    `EngineConfig(trace_telemetry=True, ...)` and call
+    `serve(requests)`; each chunk boundary logs the chunk's read sets,
+    placements, emitted/first tokens, and lane->request bindings
+    (fixed within a chunk — admission happens only at boundaries).
+    """
+    log = getattr(engine, "_serve_trace_log", None)
+    if not log:
+        raise ValueError(
+            "no serve trace telemetry captured — construct the engine "
+            "with EngineConfig(trace_telemetry=True) and drive serve() "
+            "before collect_serve()")
+    def tile(chunk, row):
+        n = chunk[0].shape[0]
+        return np.broadcast_to(row, (n,) + row.shape)
+
+    geo = engine.geo
+    return ServeTraceRecord(
+        access=np.concatenate([c[0] for c in log]).astype(bool),
+        tier=np.concatenate([c[1] for c in log]).astype(np.int8),
+        emitted=np.concatenate([c[2] for c in log]).astype(np.int32),
+        first=np.concatenate([c[3] for c in log]).astype(np.int32),
+        rids=np.concatenate([tile(c, c[4]) for c in log]).astype(np.int32),
+        prompt_len=np.concatenate([tile(c, c[5])
+                                   for c in log]).astype(np.int32),
+        page_tokens=geo.page_tokens, page_bytes=int(geo.page_bytes()),
+        hbm_pages=int(geo.hbm_pages))
+
+
+def attribute(rec: ServeTraceRecord) -> List[RequestAttribution]:
+    """Stitch each request's decode stream out of a serve record.
+
+    A request's trace is the ordered set of (step, lane) cells where
+    its lane DECODED (`emitted >= 0`) while bound to it (`rids`
+    matches) — admission, the prefill phase, the first-token crossing,
+    and reclaim all fall outside the predicate, so two requests reusing
+    the same lane can never cross-contaminate: the earlier request's
+    rows end before its release, the later one's begin after its own
+    prefill, and the released lane's cleared page table (tier UNALLOC)
+    never reaches either record. Requests that decoded zero steps
+    (max_new_tokens == 1: only the crossing token) have no access
+    pattern to score and are omitted. Ordered by first decode step.
+    """
+    decoded = rec.emitted >= 0                              # [S, B]
+    out: List[RequestAttribution] = []
+    for rid in np.unique(rec.rids[rec.rids >= 0]):
+        mask = (rec.rids == rid) & decoded
+        rows, lanes = np.nonzero(mask)
+        if rows.size == 0:
+            continue
+        access = rec.access[rows, :, lanes]                 # [S_r, L, P]
+        tier = rec.tier[rows, :, lanes]
+        record = TelemetryRecord(
+            access=access, tier=tier,
+            moves=np.zeros((rows.size, 2), np.int32),
+            page_tokens=rec.page_tokens,
+            prompt_len=int(rec.prompt_len[rows[0], lanes[0]]),
+            page_bytes=rec.page_bytes, hbm_pages=rec.hbm_pages)
+        moves = np.zeros((rows.size, 2), np.int64)
+        for layer in range(record.num_layers):
+            p, d = layer_migrations(record, layer)
+            moves[:, 0] += p
+            moves[:, 1] += d
+        record.moves = moves.astype(np.int32)
+        out.append(RequestAttribution(rid=int(rid), record=record,
+                                      rows=rows, lanes=lanes))
+    out.sort(key=lambda a: int(a.rows[0]))
+    return out
+
+
+_TRAFFIC_FIELDS = ("h_read", "e_read", "h_write", "e_write",
+                   "m_in", "m_out")
+
+
+def _scatter(acc: Dict[str, np.ndarray], traffic: StepTraffic,
+             rows: np.ndarray) -> None:
+    """Add a request's per-step traffic into the global step axis."""
+    for f in _TRAFFIC_FIELDS:
+        val = np.broadcast_to(
+            np.asarray(getattr(traffic, f), np.float64), rows.shape)
+        acc[f][rows] += val
+
+
+def score_serve(rec: ServeTraceRecord, spec, *,
+                oracles: Sequence[str] = ("sa", "belady"),
+                sa_cfg=None, report=None) -> Dict[str, object]:
+    """Score a serve stream — aggregate and per request — against the
+    simulator's bounds.
+
+    Each attributed request is replayed per layer through the oracles
+    (plus the static baseline) under the live per-layer HBM budget,
+    exactly as `score_headroom` does for a single stream. Two views
+    come out of the same replay:
+
+      per request — the request's lane-private traffic priced in
+        isolation (its own Eq. (2) max per step): `hit_fraction`,
+        `bound_fraction`, and the oracle totals. This is the
+        request-level attribution the ServeReport carries.
+      aggregate — every request's per-step volumes scattered back onto
+        the GLOBAL serve step axis and summed before the Eq. (2) max
+        (lanes execute within one serve step, so their volumes add —
+        the same aggregation per-layer traffic already gets). The
+        aggregate `bound_fraction` is the paper's headroom under
+        continuous batching.
+
+    Returns {"aggregate": {...}, "requests": {rid: {...}}}. When
+    `report` (a ServeReport) is given, stamps `report.request_scores`
+    and `report.headroom` with the same dicts.
+    """
+    atts = attribute(rec)
+    S = rec.num_steps
+    names = dict.fromkeys(tuple(oracles) + ("static",))   # ordered dedupe
+    acc = {"live": {f: np.zeros(S) for f in _TRAFFIC_FIELDS}}
+    for name in names:
+        acc[name] = {f: np.zeros(S) for f in _TRAFFIC_FIELDS}
+
+    requests: Dict[int, Dict[str, float]] = {}
+    for att in atts:
+        r = att.record
+        live = live_traffic(r)
+        _scatter(acc["live"], live, att.rows)
+        live_total = float(np.sum(step_latency(live, spec)))
+        sc: Dict[str, float] = {
+            "steps": float(r.num_steps),
+            "live_total_s": live_total,
+            "hit_fraction": hit_fraction(r),
+        }
+        for name in names:
+            tr = oracle_traffic(r, name, spec, sa_cfg=sa_cfg)
+            _scatter(acc[name], tr, att.rows)
+            sc[f"{name}_total_s"] = float(np.sum(step_latency(tr, spec)))
+        if live_total > 0:
+            if "sa" in oracles:
+                sc["bound_fraction"] = sc["sa_total_s"] / live_total
+            sc["headroom_vs_static"] = sc["static_total_s"] / live_total
+        requests[att.rid] = sc
+
+    reads = int(rec.access.sum())
+    hits = int((rec.access & (rec.tier == HBM)).sum())
+    agg: Dict[str, float] = {
+        "steps": float(S),
+        "decode_steps": float(int((rec.emitted >= 0).any(axis=1).sum())),
+        "requests": float(len(atts)),
+        "live_hit_fraction": hits / reads if reads else 1.0,
+        "live_total_s": float(np.sum(step_latency(
+            StepTraffic(**acc["live"]), spec))),
+    }
+    for name in names:
+        agg[f"{name}_total_s"] = float(np.sum(step_latency(
+            StepTraffic(**acc[name]), spec)))
+    if agg["live_total_s"] > 0:
+        if "sa" in oracles:
+            agg["bound_fraction"] = agg["sa_total_s"] / agg["live_total_s"]
+        agg["headroom_vs_static"] = \
+            agg["static_total_s"] / agg["live_total_s"]
+
+    if report is not None:
+        report.request_scores.update(requests)
+        report.headroom.update(agg)
+    return {"aggregate": agg, "requests": requests}

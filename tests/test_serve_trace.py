@@ -1,0 +1,246 @@
+"""Serve-stream trace capture + per-request headroom attribution (PR 5).
+
+Pins the tentpole invariants:
+
+  * a single-request serve stream's stitched trace is BITWISE equal to
+    the `generate` bridge's record (access, tiers, prompt_len) and
+    scores identically — the serve capture is the same instrument
+    pointed at the same program;
+  * attribution across a lane-REUSE boundary: two requests that occupy
+    the same lane one after the other get disjoint, uncontaminated
+    records (identity comes from the scheduler's bindings, never the
+    lane index);
+  * telemetry on/off leaves serve outputs and StepStats identical, and
+    capture adds ZERO retraces (one serve-chunk executable either way);
+  * per-request and aggregate bound fractions are sane (<= 1 + tol)
+    under a mixed continuous-batching stream with real HBM pressure.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.placement.base import UNALLOC
+from repro.core.sa import SAConfig
+from repro.core.tiers import GH200
+from repro.models.model import Model
+from repro.serving import trace_bridge
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.scheduler import Request
+
+SA_CFG = SAConfig(max_evaluations=8, iters_per_level=3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.get_smoke("internlm2-1.8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.key(0))
+
+
+def _cfg(stride=4, policy="importance", sparsity=0.0, max_context=128,
+         **kw):
+    return EngineConfig(max_context=max_context, hbm_fraction=0.25,
+                        policy=policy, attention_sparsity=sparsity,
+                        spec=GH200, promote_thresh=0.005,
+                        telemetry_stride=stride, prefill_chunk=16, **kw)
+
+
+def _mixed_requests(model, rng, n=5):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, model.cfg.vocab,
+                                        (16 + 16 * (i % 3),)),
+                    max_new_tokens=4 + 2 * (i % 3))
+            for i in range(n)]
+
+
+class TestSingleRequestParity:
+    """The load-bearing pin: serve's stitched per-request trace IS the
+    generate bridge's record for the same stream."""
+
+    def test_stitched_trace_bitwise_equals_generate_bridge(
+            self, dense_model):
+        model, params = dense_model
+        rng = np.random.default_rng(11)
+        S, n = 32, 9
+        prompt = rng.integers(0, model.cfg.vocab, (S,))
+
+        ref = ServingEngine(model, params, _cfg(trace_telemetry=True))
+        logits0 = ref.start(jnp.asarray(prompt[None], jnp.int32))
+        tok0 = jnp.argmax(logits0, -1).astype(jnp.int32)
+        ref.generate(tok0, n - 1)
+        grec = trace_bridge.collect(ref)
+
+        eng = ServingEngine(model, params, _cfg(trace_telemetry=True))
+        eng.serve([Request(rid=7, prompt=prompt, max_new_tokens=n)],
+                  num_slots=1)
+        atts = trace_bridge.attribute(trace_bridge.collect_serve(eng))
+        assert [a.rid for a in atts] == [7]
+        rec = atts[0].record
+
+        np.testing.assert_array_equal(rec.access, grec.access)
+        np.testing.assert_array_equal(rec.tier, grec.tier)
+        assert rec.prompt_len == grec.prompt_len
+        assert rec.num_steps == n - 1
+        # identical records -> identical scores (oracle replay included)
+        g = trace_bridge.score_headroom(grec, GH200, oracles=())
+        s = trace_bridge.score_headroom(rec, GH200, oracles=())
+        assert g == s
+
+    def test_first_token_step_excluded_from_access_model(
+            self, dense_model):
+        """The crossing step samples the first token from the PREFILL
+        plane; it must not appear as a decode access row."""
+        model, params = dense_model
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, model.cfg.vocab, (24,))
+        eng = ServingEngine(model, params, _cfg(trace_telemetry=True))
+        eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=5)],
+                  num_slots=1)
+        rec = trace_bridge.collect_serve(eng)
+        crossing = np.nonzero((rec.first[:, 0] >= 0))[0]
+        assert crossing.size == 1
+        assert not rec.access[crossing[0]].any()
+        # and every access row is an emitted (decode) row of its lane
+        step_has_access = rec.access.any(axis=(1, 3))        # [S, B]
+        assert not np.any(step_has_access & ~(rec.emitted >= 0))
+
+
+class TestLaneReuseAttribution:
+    """Two requests through ONE slot: the lane index is reused, the
+    records must not cross-contaminate."""
+
+    def test_sequential_requests_get_disjoint_clean_records(
+            self, dense_model):
+        model, params = dense_model
+        rng = np.random.default_rng(5)
+        # first request is LONGER than the second: leaked pages from
+        # request 0 would be visible as extra existing pages in 1's rows
+        r0 = Request(rid=0, prompt=rng.integers(0, model.cfg.vocab, (48,)),
+                     max_new_tokens=6)
+        r1 = Request(rid=1, prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                     max_new_tokens=6)
+        eng = ServingEngine(model, params, _cfg(trace_telemetry=True))
+        eng.serve([r0, r1], num_slots=1, seed=0)
+        rec = trace_bridge.collect_serve(eng)
+        atts = {a.rid: a for a in trace_bridge.attribute(rec)}
+        assert set(atts) == {0, 1}
+        # same lane, strictly ordered in time
+        assert np.all(atts[0].lanes == 0) and np.all(atts[1].lanes == 0)
+        assert atts[0].rows.max() < atts[1].rows.min()
+        for rid, req in ((0, r0), (1, r1)):
+            a = atts[rid]
+            assert a.record.prompt_len == req.prompt_len
+            assert a.record.num_steps == req.max_new_tokens - 1
+            # at each decode row s the lane holds exactly the request's
+            # own pages: prompt + first token + s decoded tokens
+            pt = rec.page_tokens
+            for s in range(a.record.num_steps):
+                want = -(-(req.prompt_len + 1 + s) // pt)
+                exists = (a.record.tier[s] != UNALLOC).sum(axis=-1)
+                np.testing.assert_array_equal(
+                    exists, np.full_like(exists, want))
+
+    def test_scheduler_bindings_ledger(self, dense_model):
+        model, params = dense_model
+        rng = np.random.default_rng(6)
+        reqs = _mixed_requests(model, rng, n=4)
+        eng = ServingEngine(model, params, _cfg())
+        eng.serve(reqs, num_slots=2, seed=0)
+        bindings = eng.batcher.bindings
+        assert [b["rid"] for b in bindings] == sorted(
+            b["rid"] for b in bindings)          # FIFO admission order
+        assert len(bindings) == len(reqs)
+        for b in bindings:
+            assert 0 <= b["lane"] < 2
+            assert b["released_step"] >= b["admitted_step"] >= 0
+        # slots were actually reused across the stream
+        lanes = [b["lane"] for b in bindings]
+        assert len(lanes) > len(set(lanes))
+
+
+class TestTelemetryIsPureObservation:
+    def test_serve_outputs_and_stats_identical_on_off(self, dense_model):
+        model, params = dense_model
+
+        def run(capture):
+            eng = ServingEngine(model, params,
+                                _cfg(trace_telemetry=capture))
+            rep = eng.serve(_mixed_requests(model,
+                                            np.random.default_rng(9)),
+                            num_slots=2, seed=3)
+            outs = {r.rid: list(r.output) for r in rep}
+            return outs, eng.stats, eng
+
+        outs_on, stats_on, _ = run(True)
+        outs_off, stats_off, _ = run(False)
+        assert outs_on == outs_off
+        assert stats_on == stats_off
+
+    def test_zero_retraces_with_capture(self, dense_model):
+        """Telemetry rides the existing scan ys: one serve-chunk
+        executable across a mixed stream, capture on."""
+        model, params = dense_model
+        rng = np.random.default_rng(2)
+        eng = ServingEngine(model, params, _cfg(trace_telemetry=True))
+        eng.serve(_mixed_requests(model, rng, n=6), num_slots=2, seed=1)
+        assert eng._serve_jit._cache_size() == 1
+
+
+class TestMixedStreamScoring:
+    @pytest.fixture(scope="class")
+    def scored(self, dense_model):
+        """A contended stream: 272/288-token prompts spill past the
+        16-page per-lane HBM pool (ctx 512) and Quest sparsity
+        concentrates reads, so placement matters."""
+        model, params = dense_model
+        rng = np.random.default_rng(17)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab,
+                                            (272 + 16 * (i % 2),)),
+                        max_new_tokens=8)
+                for i in range(4)]
+        eng = ServingEngine(model, params, _cfg(
+            stride=8, policy="static", sparsity=0.5,
+            trace_telemetry=True, max_context=512))
+        report = eng.serve(reqs, num_slots=2, seed=0)
+        rec = trace_bridge.collect_serve(eng)
+        out = trace_bridge.score_serve(rec, GH200, sa_cfg=SA_CFG,
+                                       report=report)
+        return rec, report, out
+
+    def test_per_request_bound_fraction_sane(self, scored):
+        rec, report, out = scored
+        assert len(out["requests"]) == 4
+        for rid, sc in out["requests"].items():
+            assert sc["live_total_s"] > 0
+            assert 0.0 < sc["hit_fraction"] <= 1.0
+            # the live policy is static, and live static == simulated
+            # static (the bridge self-test), so the SA bound can never
+            # come out meaningfully above the live total
+            assert 0.0 < sc["bound_fraction"] <= 1.0 + 1e-3, (rid, sc)
+            assert sc["sa_total_s"] <= sc["static_total_s"] * 1.001
+            assert sc["live_total_s"] == \
+                pytest.approx(sc["static_total_s"], rel=1e-9)
+
+    def test_aggregate_stream_headroom(self, scored):
+        rec, report, out = scored
+        agg = out["aggregate"]
+        assert agg["live_total_s"] > 0
+        assert 0.0 < agg["bound_fraction"] <= 1.0 + 1e-3
+        assert 0.0 < agg["live_hit_fraction"] < 1.0
+        # max is subadditive: summing lanes BEFORE the Eq.(2) max lets
+        # one lane's HBM time overlap another's DRAM time, so the
+        # aggregate can only be <= the per-request totals in isolation
+        iso = sum(sc["live_total_s"] for sc in out["requests"].values())
+        assert agg["live_total_s"] <= iso * (1 + 1e-9)
+
+    def test_report_carries_attribution(self, scored):
+        rec, report, out = scored
+        assert set(report.request_scores) == set(out["requests"])
+        assert report.headroom["bound_fraction"] == \
+            out["aggregate"]["bound_fraction"]
+        for sc in report.request_scores.values():
+            assert {"hit_fraction", "bound_fraction"} <= set(sc)

@@ -102,13 +102,15 @@ class TestRecord:
         with pytest.raises(ValueError, match="trace_telemetry"):
             trace_bridge.collect(eng)
 
-    def test_serve_rejects_capture(self, dense_model):
+    def test_collect_serve_without_capture_raises(self, dense_model):
+        """serve() accepts capture since PR 5; collecting a stream that
+        never captured still fails loudly."""
         model, params = dense_model
-        eng = ServingEngine(model, params, EngineConfig(
-            policy="static", trace_telemetry=True))
-        with pytest.raises(NotImplementedError, match="trace_telemetry"):
-            eng.serve([Request(rid=0, prompt=np.arange(8),
-                               max_new_tokens=2)])
+        eng = ServingEngine(model, params, EngineConfig(policy="static"))
+        eng.serve([Request(rid=0, prompt=np.arange(8),
+                           max_new_tokens=2)])
+        with pytest.raises(ValueError, match="trace_telemetry"):
+            trace_bridge.collect_serve(eng)
 
 
 class TestScoring:
