@@ -63,6 +63,18 @@ A seventh scores the bound where the serving traffic is
            decode. Asserted per policy: ONE serve executable with
            capture on (telemetry adds zero retraces).
 
+An eighth leg is the robustness smoke (EXPERIMENTS.md
+§Fault-injection):
+
+  chaos  — the SAME engine serves the same request stream clean, then
+           under a seeded `FaultPlane` (tier degradation + migration
+           drop + pool shrink + one poisoned lane). Asserted: serve()
+           never raises, every request ends in a terminal status, the
+           poisoned request ends `failed`, every fault-free request's
+           tokens are BITWISE identical to its clean-run tokens, and
+           the serve-chunk executable count stays at ONE across both
+           runs — faults are data, not shape.
+
 Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite; the file is
 stamped with `schema_version` + the producing `commit` so trajectory
 tooling can parse it). The headline is fused/host steps-per-second;
@@ -78,8 +90,9 @@ CI:   PYTHONPATH=src python benchmarks/perf_engine.py --ci
       long prompt, one executable per device policy — serve telemetry
       included — importance hit fraction >= static in the policy
       sweep, per-policy aggregate + per-request hit/bound fractions
-      present in the serve sweep, and the single-request serve bridge
-      bitwise equal to the generate bridge)
+      present in the serve sweep, the single-request serve bridge
+      bitwise equal to the generate bridge, and the chaos smoke's
+      graceful-degradation contract above)
 """
 
 from __future__ import annotations
@@ -101,8 +114,11 @@ from repro.kvcache.paged import prefill_cache
 from repro.models.model import Model
 from repro.serving import control, trace_bridge
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.faults import (
+    FaultPlane, MigrationFault, PoisonFault, PoolFault, TierFault,
+)
 from repro.serving.policies import policy_names
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import Request, TERMINAL_STATUSES
 
 STEPS = 64          # multiple of STRIDE: scan lengths compile once in warmup
 STRIDE = 32
@@ -112,7 +128,9 @@ HOST_STEPS = 8          # the host baseline is too slow for more
 #: meaning; trajectory tooling keys off this + the `commit` stamp.
 #: v2: added serve_policy_sweep (aggregate + per-request fractions)
 #: and the schema_version/commit provenance stamp itself.
-BENCH_SCHEMA_VERSION = 2
+#: v3: added the chaos smoke row (terminal-status counts, fault-event
+#: count, bitwise-unaffected pin) from the fault-injection plane.
+BENCH_SCHEMA_VERSION = 3
 
 
 def _git_commit() -> str:
@@ -524,6 +542,57 @@ def _assert_serve_bridge_matches_generate(model, params):
     assert rec.prompt_len == grec.prompt_len
 
 
+def _chaos_smoke(model, params):
+    """Graceful-degradation smoke (module doc leg eight): same engine,
+    same stream, clean then under a seeded four-kind fault schedule.
+    Returns the BENCH row; raises AssertionError on any contract break.
+    """
+    eng = ServingEngine(model, params, EngineConfig(
+        max_context=128, hbm_fraction=0.25, policy="cost_aware",
+        attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4,
+        telemetry_stride=8, prefill_chunk=16))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, model.cfg.vocab, (24 + 8 * (i % 3),))
+               for i in range(4)]
+
+    def mk():
+        return [Request(rid=i, prompt=p, max_new_tokens=10)
+                for i, p in enumerate(prompts)]
+
+    clean = eng.serve(mk(), num_slots=2, seed=0)
+    assert all(r.status == "ok" for r in clean), clean.statuses
+    clean_out = {r.rid: list(r.output) for r in clean}
+
+    plane = FaultPlane(
+        tier=(TierFault(start=4, stop=20, link_scale=0.05),),
+        migration=(MigrationFault(start=0, stop=12, commit_frac=0.0),),
+        pool=(PoolFault(step=16, delta=-2), PoolFault(step=32, delta=2)),
+        poison=(PoisonFault(rid=1, step=6),))
+    report = eng.serve(mk(), num_slots=2, seed=0, faults=plane)
+
+    statuses = report.statuses
+    assert set(statuses) == set(clean_out), statuses
+    assert all(s in TERMINAL_STATUSES for s in statuses.values()), \
+        statuses
+    assert statuses[1] == "failed", statuses
+    for r in report:
+        if r.rid != 1:       # fault-free lanes: bitwise identical
+            assert r.status == "ok" and list(r.output) == \
+                clean_out[r.rid], (r.rid, r.status)
+    # faults are data, not shape: clean + faulted share ONE executable
+    exes = eng._serve_jit._cache_size()
+    assert exes == 1, exes
+    assert report.events, "fault schedule produced no telemetry events"
+    n_ok = sum(1 for s in statuses.values() if s == "ok")
+    return {
+        "statuses": {str(k): v for k, v in sorted(statuses.items())},
+        "ok_requests": n_ok,
+        "failed_requests": len(statuses) - n_ok,
+        "fault_events": len(report.events),
+        "serve_chunk_executables": exes,
+    }
+
+
 def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     cfg = configs.get_smoke("internlm2-1.8b")
     model = Model(cfg)
@@ -625,6 +694,12 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
 
     if ci:
         _assert_serve_bridge_matches_generate(model, params)
+    chaos = _chaos_smoke(model, params)
+    result["rows"]["chaos"] = chaos
+    rows.append(("chaos/ok_requests", 0.0, chaos["ok_requests"]))
+    rows.append(("chaos/failed_requests", 0.0,
+                 chaos["failed_requests"]))
+    rows.append(("chaos/fault_events", 0.0, chaos["fault_events"]))
     serve_sweep = _serve_policy_sweep(model, params, ci=ci)
     result["rows"]["serve_policy_sweep"] = serve_sweep
     for name, row in serve_sweep.items():
@@ -685,7 +760,7 @@ if __name__ == "__main__":
     ap.add_argument("--steps", type=int, default=STEPS)
     ap.add_argument("--ci", action="store_true",
                     help="reduced geometry + fused>=eager + policy-sweep "
-                         "gates (CI smoke)")
+                         "+ chaos graceful-degradation gates (CI smoke)")
     ap.add_argument("--policy-sweep", action="store_true",
                     help="run only the device-policy sweep (steps/s, hit "
                          "fraction, fraction-of-SA-upper-bound per policy)")

@@ -41,6 +41,19 @@ def payback_threshold(spec, horizon_steps: float) -> float:
     return move_cost / (gain_per_read * horizon_steps)
 
 
+def hysteresis_thresholds(spec, horizon_steps: float,
+                          demote_ratio: float = 0.25
+                          ) -> tuple[float, float]:
+    """(promote, demote) payback thresholds for a spec: promote at the
+    full payback bar, demote only when importance falls below
+    `demote_ratio` of it (the hysteresis band that stops thrash).
+    The serving `CostAwarePolicy` carries these as policy-state DATA so
+    a tier-degradation fault can recalibrate them mid-stream without
+    retracing the serve executable."""
+    t_pro = payback_threshold(spec, horizon_steps)
+    return t_pro, demote_ratio * t_pro
+
+
 class CostAwareHysteresis(PlacementPolicy):
     name = "cost_aware"
     uses_foresight = False

@@ -1,15 +1,25 @@
 """Live serving stack: the fused two-tier decode engine, its pluggable
 device placement policies, continuous-batching scheduler, on-device
-sampling, and the telemetry bridge to the placement simulator. See
-EXPERIMENTS.md (§Fused-engine through §Serve-trace) for architecture."""
+sampling, deterministic fault-injection plane, and the telemetry bridge
+to the placement simulator. See EXPERIMENTS.md (§Fused-engine through
+§Fault-injection) for architecture."""
 
-from repro.serving.engine import ServingEngine, EngineConfig, StepStats
+from repro.serving.engine import (
+    ServingEngine, EngineConfig, ServeReport, StepStats,
+)
+from repro.serving.faults import (
+    FaultPlane, MigrationFault, PoisonFault, PoolFault, TierFault,
+)
 from repro.serving.policies import (
     DevicePolicy, make_policy, policy_names, register,
 )
 from repro.serving.sampling import SamplingConfig
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (
+    ContinuousBatcher, Request, RequestError, TERMINAL_STATUSES,
+)
 
-__all__ = ["ServingEngine", "EngineConfig", "StepStats", "SamplingConfig",
-           "ContinuousBatcher", "Request", "DevicePolicy", "make_policy",
-           "policy_names", "register"]
+__all__ = ["ServingEngine", "EngineConfig", "ServeReport", "StepStats",
+           "SamplingConfig", "ContinuousBatcher", "Request",
+           "RequestError", "TERMINAL_STATUSES", "DevicePolicy",
+           "make_policy", "policy_names", "register", "FaultPlane",
+           "TierFault", "MigrationFault", "PoolFault", "PoisonFault"]

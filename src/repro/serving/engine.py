@@ -74,11 +74,14 @@ from repro.kvcache.migrate import apply_migrations
 from repro.kvcache.paged import PagedKVCache, abstract_cache, init_cache
 from repro.models.model import Model
 from repro.serving import control
+from repro.serving.faults import FaultPlane, NO_FAULT_CAP, throttle_plan
 from repro.serving.policies import make_policy, policy_names
 from repro.serving.sampling import (
     SamplingConfig, lane_key, make_sampler, split_lanes,
 )
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (
+    ContinuousBatcher, Request, RequestError,
+)
 
 
 @dataclasses.dataclass
@@ -132,6 +135,19 @@ class EngineConfig:
     #: Pure observation: tokens, StepStats, and executable counts are
     #: identical with capture on or off.
     trace_telemetry: bool = False
+    #: policy fallback: after this many CONSECUTIVE chunk boundaries
+    #: whose migration commits were fully dropped (a MigrationFault
+    #: window forcing cap 0 at some step), `serve` degrades the policy
+    #: to static behavior by uploading all-zero commit caps — same
+    #: executable, migrations masked as data — and stamps a
+    #: "policy_fallback" event. The fallback is sticky for the stream.
+    fallback_commit_faults: int = 3
+    #: policy fallback: degrade to static when a tier fault pushes the
+    #: effective HBM:DRAM bandwidth ratio past this MULTIPLE of the
+    #: base spec's ratio (relative, so GH200 ~9.8x and TPU v5e ~25.6x
+    #: base ratios share one knob) — with the host tier that slow,
+    #: migrating pages toward it can no longer pay back.
+    fallback_tier_ratio: float = 8.0
 
 
 @dataclasses.dataclass
@@ -158,6 +174,17 @@ class ServeReport:
     Sequence-like over `completed`, so `for r in report` / `report[0]`
     / `len(report)` keep working at PR 2 call sites.
 
+    `completed` holds every request that occupied a lane — terminal
+    status "ok", or "failed"/"cancelled"/"timeout" when the engine
+    quarantined or reaped it mid-flight; `rejected` holds requests
+    refused before admission (invalid, infeasible, duplicate rid, or
+    reaped while still queued), each with a typed `Request.error`.
+    `statuses` maps every submitted rid to its terminal status — the
+    stream NEVER raises on a per-request condition, so the mapping is
+    exhaustive. `events` is the chronological degradation log (injected
+    faults activating, pool resizes, policy fallback) a faulted stream
+    accumulated — see `repro.serving.faults`.
+
     When the stream ran with `EngineConfig.trace_telemetry` and the
     bridge scored it (`trace_bridge.score_serve(..., report=...)`),
     `request_scores` maps each request id to its attributed placement
@@ -169,16 +196,29 @@ class ServeReport:
     completed: List[Request]
     ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
     tpot: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: requests refused before admission (typed `Request.error` each)
+    rejected: List[Request] = dataclasses.field(default_factory=list)
+    #: chronological degradation events (fault activations, pool
+    #: resizes, payback recalibrations, policy fallback)
+    events: List[dict] = dataclasses.field(default_factory=list)
     #: rid -> per-request attribution scores (trace_bridge.score_serve)
     request_scores: Dict[int, Dict[str, float]] = \
         dataclasses.field(default_factory=dict)
     #: aggregate stream headroom (live vs SA/Belady/static totals)
     headroom: Dict[str, float] = dataclasses.field(default_factory=dict)
 
+    @property
+    def statuses(self) -> Dict[int, str]:
+        """rid -> terminal status, exhaustive over every request that
+        entered `serve` (completed and rejected alike)."""
+        return {r.rid: r.status for r in self.completed + self.rejected}
+
     @staticmethod
-    def build(completed: List[Request]) -> "ServeReport":
-        """Assemble a report from completed requests: TTFT/TPOT
-        mean/p50/p95 from their wall-clock stamps."""
+    def build(completed: List[Request],
+              rejected: Optional[List[Request]] = None,
+              events: Optional[List[dict]] = None) -> "ServeReport":
+        """Assemble a report from terminal requests: TTFT/TPOT
+        mean/p50/p95 from the completed requests' wall-clock stamps."""
         def pct(vals):
             if not vals:
                 return {}
@@ -195,7 +235,9 @@ class ServeReport:
                  if r.first_token_at is not None
                  and r.finished_at is not None and len(r.output) > 1]
         return ServeReport(completed=list(completed), ttft=pct(ttfts),
-                           tpot=pct(tpots))
+                           tpot=pct(tpots),
+                           rejected=list(rejected or []),
+                           events=list(events or []))
 
     def __iter__(self):
         return iter(self.completed)
@@ -299,7 +341,8 @@ class ServingEngine:
         sampler = make_sampler(self._sampling)
         self._sampler = sampler
 
-        def step_fn(params, state, pstate, token, active=None):
+        def step_fn(params, state, pstate, token, active=None,
+                    mig_cap=None):
             cache = _get_cache(state)
             kwargs = {"write_slot": control.choose_write_slot(cache)}
             mask = None
@@ -324,6 +367,15 @@ class ServingEngine:
             occ = control.occupancy(cache)
             plan, pstate, (n_pro, n_dem) = policy.plan(
                 cache, pstate, active, budget, read_mask=read)
+            if mig_cap is not None:
+                # migration-fault channel (serve only): commit at most
+                # `mig_cap` promote rows this step — cap is traced DATA
+                # (NO_FAULT_CAP = identity), so the clean and faulted
+                # streams share one executable. Telemetry counts the
+                # COMMITTED moves, so pricing and the bridge's scores
+                # see the placement that actually happened.
+                plan = throttle_plan(plan, mig_cap)
+                n_pro, n_dem = plan.row_counts()
             moves = jnp.stack([n_pro, n_dem]).astype(jnp.int32)
             base = jnp.concatenate([occ, moves])
             if capture:
@@ -376,7 +428,7 @@ class ServingEngine:
 
         def serve_chunk_fn(params, state, pstate, token, active, remaining,
                            keys, prefilled, prompt_len, prompt_buf,
-                           credits):
+                           credits, mig_caps, poison):
             """One fused chunk of MIXED prefill+decode steps.
 
             Carries per-slot (token, active, remaining budget, PRNG key,
@@ -394,9 +446,20 @@ class ServingEngine:
             budget-1/EOS at the crossing) flips the lane's active bit
             on device; the host reclaims and re-admits at the chunk
             boundary.
+
+            Fault channel (always compiled in — values, never shapes):
+            `mig_caps` [stride] int32 caps each step's migration
+            commits (`NO_FAULT_CAP` = untouched) and `poison`
+            [stride, B] bool overwrites a lane's logits with NaN. The
+            non-finite sampling guard is ALWAYS on, injected or not: a
+            lane whose logits go NaN/Inf emits nothing that step, flips
+            inactive, and is flagged in the `failed` output so the host
+            completes it with status "failed" — every other lane's
+            tokens are bitwise what they are in a clean run.
             """
-            def body(carry, _):
+            def body(carry, xs):
                 st, ps, tok, act, rem, ks, prog, cred = carry
+                cap, poi = xs
                 pf, dec = control.lane_modes(act, prog, prompt_len)
 
                 # decode plane: skipped (lax.cond) on pure-prefill
@@ -406,7 +469,8 @@ class ServingEngine:
                 # filtered at the boundary, so skipping it only saves
                 # the dead forward
                 def run_dec(args):
-                    return step_fn(params, args[0], args[1], args[2], dec)
+                    return step_fn(params, args[0], args[1], args[2], dec,
+                                   mig_cap=cap)
 
                 def skip_dec(args):
                     c = _get_cache(args[0])
@@ -434,15 +498,23 @@ class ServingEngine:
                     # are write traffic, not part of the access model
                     stats = (stats[0], stats[1] & dec[None, :, None],
                              stats[2])
+                # poison injection + non-finite sampling guard. The
+                # injected NaN and a genuinely non-finite model output
+                # take the same quarantine path: the lane emits nothing
+                # this step, keeps its budget, and flips inactive.
+                nanv = jnp.asarray(jnp.nan, logits.dtype)
+                logits = jnp.where((dec & poi)[:, None], nanv, logits)
+                bad = dec & ~jnp.isfinite(logits).all(axis=-1)
+                dec_ok = dec & ~bad
                 ks, sub = split_lanes(ks)
                 nxt = sampler(logits, sub)
-                rem = rem - dec.astype(rem.dtype)
-                fin = dec & (rem <= 0)
+                rem = rem - dec_ok.astype(rem.dtype)
+                fin = dec_ok & (rem <= 0)
                 if eos is not None:
-                    fin = fin | (dec & (nxt == eos))
-                emitted = jnp.where(dec, nxt, -1)
-                tok = jnp.where(dec, nxt, tok)
-                act = act & ~fin
+                    fin = fin | (dec_ok & (nxt == eos))
+                emitted = jnp.where(dec_ok, nxt, -1)
+                tok = jnp.where(dec_ok, nxt, tok)
+                act = act & ~fin & ~bad
 
                 # prefill plane: a C-token slice per prefilling lane,
                 # written straight into its pages at offset `prog`
@@ -485,6 +557,13 @@ class ServingEngine:
                 last = jnp.clip(n_val - 1, 0, C - 1)
                 logits1 = jnp.take_along_axis(
                     logits_c, last[:, None, None], axis=1)[:, 0]
+                # the same poison + guard protects the crossing sample:
+                # a lane poisoned (or non-finite) at its first token
+                # fails before emitting anything
+                nanv1 = jnp.asarray(jnp.nan, logits1.dtype)
+                logits1 = jnp.where((pf & poi)[:, None], nanv1, logits1)
+                bad0 = crossed & ~jnp.isfinite(logits1).all(axis=-1)
+                crossed = crossed & ~bad0
                 tok0 = sampler(logits1, sub)
                 first = jnp.where(crossed, tok0, -1)
                 tok = jnp.where(crossed, tok0, tok)
@@ -492,18 +571,18 @@ class ServingEngine:
                 fin0 = crossed & (rem <= 0)
                 if eos is not None:
                     fin0 = fin0 | (crossed & (tok0 == eos))
-                act = act & ~fin0
+                act = act & ~fin0 & ~bad0
                 return (st, ps, tok, act, rem, ks, prog, cred), (
-                    emitted, first, stats)
+                    emitted, first, bad | bad0, stats)
 
             carry = (state, pstate, token, active, remaining, keys,
                      prefilled, credits)
-            carry, (emitted, first, stats) = jax.lax.scan(
-                body, carry, None, length=max(1, cfg.telemetry_stride))
+            carry, (emitted, first, failed, stats) = jax.lax.scan(
+                body, carry, (mig_caps, poison))
             (state, pstate, token, active, remaining, keys, prefilled,
              credits) = carry
             return (state, pstate, token, active, remaining, keys,
-                    prefilled, credits, emitted, first, stats)
+                    prefilled, credits, emitted, first, failed, stats)
 
         self._step_jit = jax.jit(step_fn, donate_argnums=(1, 2))
         self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1, 2))
@@ -568,7 +647,8 @@ class ServingEngine:
               num_slots: Optional[int] = None,
               sampling: Optional[SamplingConfig] = None,
               seed: int = 0, total_pages: Optional[int] = None,
-              max_skips: int = 8) -> ServeReport:
+              max_skips: int = 8,
+              faults: Optional[FaultPlane] = None) -> ServeReport:
         """Drive a request stream end-to-end through the fused hot path.
 
         A fixed batch of `num_slots` cache lanes runs as ONE jitted
@@ -611,6 +691,32 @@ class ServingEngine:
         scores the stream (and each request) against the SA upper
         bound. Capture is pure observation: tokens, StepStats, and the
         one-executable-per-stream property are unchanged.
+
+        Failure semantics (see `repro.serving.faults` and
+        EXPERIMENTS.md §Fault-injection): serve NEVER raises on a
+        per-request condition. Invalid requests (missing prompt,
+        `max_new_tokens < 1`, prompt+budget over the cache capacity),
+        duplicates, and pool-infeasible footprints are REJECTED with a
+        typed error while the rest of the stream proceeds; per-request
+        `deadline_s` and `cancel()` are honored at chunk boundaries
+        ("timeout"/"cancelled" — live lanes release their pages, queued
+        requests are dropped); a lane whose logits go non-finite is
+        quarantined on device and completed as "failed". Every request
+        ends in exactly one terminal status (`ServeReport.statuses`).
+
+        `faults` optionally injects a deterministic adversity schedule
+        (`FaultPlane`): tier-bandwidth degradation reprices telemetry
+        under the degraded spec and recalibrates cost_aware paybacks;
+        migration faults throttle plan commits; pool faults resize the
+        scheduler's page pool; poison faults NaN a lane's logits. The
+        fault channel is compiled into the serve executable as DATA
+        (per-step caps + poison masks), so a clean run and a faulted
+        run share ONE executable and fault-free lanes produce bitwise
+        identical tokens. Degradations are stamped into
+        `ServeReport.events`, and repeated commit drops or a tier
+        ratio past `EngineConfig.fallback_tier_ratio` degrade the
+        policy to static behavior (all commits masked) for the rest of
+        the stream.
         """
         cfg = self.cfg
         fam = self.model.cfg.family
@@ -624,17 +730,6 @@ class ServingEngine:
         B = num_slots if num_slots is not None else min(len(requests), 4)
         geo = self.model.cache_geometry(
             B, cfg.max_context, hbm_fraction=cfg.hbm_fraction)
-        for r in requests:
-            if r.prompt is None:
-                raise ValueError(
-                    f"request {r.rid}: serve() needs prompt tokens")
-            if r.max_new_tokens < 1:
-                raise ValueError(
-                    f"request {r.rid}: max_new_tokens must be >= 1")
-            if r.prompt_len + r.max_new_tokens > geo.max_tokens:
-                raise ValueError(
-                    f"request {r.rid}: {r.prompt_len}+{r.max_new_tokens} "
-                    f"tokens exceed cache capacity {geo.max_tokens}")
         self.geo = geo
         self.state = init_cache(geo)
         self.stats = []
@@ -651,8 +746,35 @@ class ServingEngine:
         batcher = ContinuousBatcher(B, pool, page_tokens=geo.page_tokens,
                                     max_skips=max_skips)
         self.batcher = batcher
+        # per-request validation: an invalid request is REJECTED with a
+        # typed error; everyone else keeps serving (no batch-wide abort)
         for r in requests:
-            batcher.submit(r)
+            if r.prompt is None:
+                batcher.reject_submit(
+                    r, "empty_prompt",
+                    f"request {r.rid}: serve() needs prompt tokens")
+            elif r.max_new_tokens < 1:
+                batcher.reject_submit(
+                    r, "zero_budget",
+                    f"request {r.rid}: max_new_tokens must be >= 1")
+            elif r.prompt_len + r.max_new_tokens > geo.max_tokens:
+                batcher.reject_submit(
+                    r, "infeasible_context",
+                    f"request {r.rid}: {r.prompt_len}+{r.max_new_tokens}"
+                    f" tokens exceed cache capacity {geo.max_tokens}")
+            else:
+                batcher.submit(r)   # may itself reject (duplicate /
+                #                     pool-infeasible footprint)
+
+        # fault plumbing: a neutral plane keeps the (always-compiled)
+        # fault channel at identity values for clean runs
+        faults = faults if faults is not None else FaultPlane()
+        base_spec = cfg.spec
+        cap_rows = control.plan_capacity(geo, cfg.migration_budget_frac)
+        events: List[dict] = []
+        last_spec = base_spec
+        fallback = False
+        drop_streak = 0
 
         stride = max(1, cfg.telemetry_stride)
         root = jax.random.PRNGKey(seed)
@@ -684,28 +806,85 @@ class ServingEngine:
         view = batcher.device_view()
         while batcher.has_work:
             if not view.active.any():
-                stuck = batcher.queue[0]
-                raise RuntimeError(
-                    f"request {stuck.rid} needs {stuck.pages_needed} pages"
-                    f" but the pool has only {batcher.total_pages}")
+                # nothing live but work queued: the head can't be
+                # admitted with every page free (footprint vs a
+                # possibly shrunken pool) — reject it and move on
+                # instead of killing the stream mid-flight
+                if not batcher.queue:
+                    break
+                stuck = batcher.queue.popleft()
+                batcher.reject(
+                    stuck, "admission_stalled",
+                    f"needs {stuck.pages_needed} pages, pool has "
+                    f"{batcher.free_pages}/{batcher.total_pages} free")
+                admit()
+                view = batcher.device_view()
+                continue
+            step0 = batcher.step_idx
+            events.extend(faults.window_events(step0, stride))
+            # tier fault: reprice + recalibrate under the spec that
+            # governs this chunk; past the ratio threshold, migrating
+            # toward the host tier can't pay back — fall back to static
+            spec_now = faults.spec_at(step0, base_spec)
+            if spec_now != last_spec:
+                pstate = self._policy.recalibrate(pstate, spec_now)
+                last_spec = spec_now
+                events.append({
+                    "kind": "payback_recalibration", "step": step0,
+                    "bw_ratio": spec_now.bw_ratio})
+            if not fallback and spec_now.bw_ratio >= \
+                    cfg.fallback_tier_ratio * base_spec.bw_ratio:
+                fallback = True
+                events.append({
+                    "kind": "policy_fallback", "step": step0,
+                    "reason": "tier_ratio",
+                    "bw_ratio": spec_now.bw_ratio})
+            caps_np = faults.commit_caps(step0, stride, cap_rows)
+            if (caps_np == 0).any():
+                drop_streak += 1
+            else:
+                drop_streak = 0
+            if not fallback and \
+                    drop_streak >= max(1, cfg.fallback_commit_faults):
+                fallback = True
+                events.append({
+                    "kind": "policy_fallback", "step": step0,
+                    "reason": "commit_faults",
+                    "boundaries": drop_streak})
+            if fallback:
+                # static fallback as DATA: all commits masked — the
+                # same executable keeps running, it just stops moving
+                # pages (exactly the registered `static` policy's
+                # behavior: plans exist, none commit)
+                caps_np = np.zeros_like(caps_np)
+            poison_np = faults.poison_steps(step0, stride, view.rids)
             t0 = time.time()
             (self.state, pstate, tok_d, act_d, _rem_d, keys_d, prog_d,
-             credits, emitted, first, stats) = self._serve_jit(
+             credits, emitted, first, failed, stats) = self._serve_jit(
                 self.params, self.state, pstate, jnp.asarray(hs["token"]),
                 jnp.asarray(view.active), jnp.asarray(view.remaining),
                 jnp.asarray(hs["keys"]), jnp.asarray(view.prefilled),
                 jnp.asarray(view.prompt_len),
-                jnp.asarray(hs["prompt_buf"]), credits)
+                jnp.asarray(hs["prompt_buf"]), credits,
+                jnp.asarray(caps_np), jnp.asarray(poison_np))
             emitted = np.asarray(emitted)               # [stride, B]
             first = np.asarray(first)                   # [stride, B]
+            failed_lane = np.asarray(failed).any(axis=0)      # [B]
             hs["token"] = np.array(tok_d)               # writable copies:
             hs["keys"] = np.array(keys_d)               # admit() pokes them
             prog = np.asarray(prog_d)
             done_d = ~np.asarray(act_d)
             # telemetry: only steps where at least one lane DECODED —
             # prefill-only steps (first tokens included) are charged to
-            # the prefill stage, matching the simulator's convention
-            self._record((np.asarray(stats[0])[emitted.max(axis=1) >= 0],))
+            # the prefill stage, matching the simulator's convention;
+            # under a tier fault each surviving row is priced with the
+            # spec governing ITS step
+            row_mask = emitted.max(axis=1) >= 0
+            specs = None
+            if faults.tier:
+                specs = [faults.spec_at(step0 + i, base_spec)
+                         for i in np.nonzero(row_mask)[0]]
+            self._record((np.asarray(stats[0])[row_mask],), specs=specs)
             if len(stats) == 3:
                 # serve trace capture: the full-batch read set + tiers,
                 # stamped with the chunk's lane->request bindings (fixed
@@ -738,12 +917,46 @@ class ServingEngine:
                 req.output.extend(int(rows[s]) for s in got)
                 req.generated += len(got)
                 req.prefilled = int(min(prog[lane], req.prompt_len))
-                if done_d[lane]:      # EOS/budget decided on device
+                if done_d[lane]:      # EOS/budget/quarantine, on device
                     del live[lane]
                     release[lane] = True
-                    batcher.complete(req)
+                    if failed_lane[lane]:
+                        # non-finite logits quarantined this lane: no
+                        # token was emitted from the poisoned step on,
+                        # pages release below, the stream keeps serving
+                        batcher.complete(req, "failed", RequestError(
+                            "poisoned_logits",
+                            f"non-finite logits on lane {lane}"))
+                    else:
+                        batcher.complete(req)
                     if got.size:
                         req.finished_at = stamp(int(got[-1]))
+            # deadline + cooperative cancellation, at chunk-boundary
+            # granularity: reaped lanes release pages like any other
+            # completion; queued requests are dropped before admission
+            now = time.time()
+            for lane, req in list(live.items()):
+                timed_out = req.deadline_s is not None and \
+                    now - req.submitted_at > req.deadline_s
+                if not (req.cancel_requested or timed_out):
+                    continue
+                status = "cancelled" if req.cancel_requested else "timeout"
+                del live[lane]
+                release[lane] = True
+                batcher.complete(req, status, RequestError(
+                    "cancelled" if status == "cancelled"
+                    else "deadline_exceeded",
+                    f"reaped at step {batcher.step_idx + stride}"))
+            for req in [q for q in batcher.queue
+                        if q.cancel_requested or
+                        (q.deadline_s is not None and
+                         now - q.submitted_at > q.deadline_s)]:
+                status = "cancelled" if req.cancel_requested else "timeout"
+                batcher.drop_queued(
+                    req, status,
+                    "cancelled" if status == "cancelled"
+                    else "deadline_exceeded",
+                    "reaped while queued")
             if release.any():
                 # ONE masked release per boundary covers every
                 # completion in the chunk — including instant
@@ -751,10 +964,14 @@ class ServingEngine:
                 # device call each at admission
                 self.state = self._release_jit(self.state,
                                                jnp.asarray(release))
+            delta = faults.pool_delta(step0, stride)
+            if delta:
+                batcher.resize_pool(delta)
             batcher.step_idx += stride
             admit()
             view = batcher.device_view()
-        return ServeReport.build(batcher.completed)
+        return ServeReport.build(batcher.completed, batcher.rejected,
+                                 events)
 
     def _admit_lane(self, req: Request, hs: Dict) -> None:
         """Bind an admitted request to its cache lane for CHUNKED
@@ -776,7 +993,7 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     # telemetry (host side, Eq. (1)-(5) pricing)
     # ------------------------------------------------------------------ #
-    def _record(self, stats):
+    def _record(self, stats, specs=None):
         """Price a batch of per-step device telemetry into `self.stats`.
 
         stats: a tuple off the device — `(base,)` or, with
@@ -785,7 +1002,12 @@ class ServingEngine:
         and access/tier are the per-step [n, L, B, P] page read set and
         placement; lane 0 is kept raw for the single-stream bridge
         (`trace_bridge.collect` — serve capture goes through
-        `_serve_trace_log` instead, with all lanes)."""
+        `_serve_trace_log` instead, with all lanes).
+
+        `specs`: optional per-row `MemorySystemSpec` list — under a
+        tier fault, `serve` prices each surviving row with the
+        (degraded) spec governing its step instead of `cfg.spec`, so
+        the modeled latency of a degraded window is honest."""
         if len(stats) == 3:
             self._trace_log.append(
                 (stats[0], stats[1][:, :, 0], stats[2][:, :, 0]))
@@ -793,13 +1015,14 @@ class ServingEngine:
         geo = self.geo
         pb = geo.page_bytes()
         frac = 1.0 - self.cfg.attention_sparsity
-        for h_pages, e_pages, n_pro, n_dem in stats:
+        for i, (h_pages, e_pages, n_pro, n_dem) in enumerate(stats):
+            spec = specs[i] if specs is not None else self.cfg.spec
             traffic = dict(
                 h_read=float(h_pages) * pb * frac,
                 e_read=float(e_pages) * pb * frac,
                 m_in=float(n_pro) * pb, m_out=float(n_dem) * pb,
                 h_write=pb / geo.page_tokens, e_write=0.0)
-            lat = float(step_latency(StepTraffic(**traffic), self.cfg.spec))
+            lat = float(step_latency(StepTraffic(**traffic), spec))
             denom = traffic["h_read"] + traffic["e_read"]
             self.stats.append(StepStats(
                 modeled_latency_s=lat,

@@ -61,7 +61,7 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.placement.cost_aware import payback_threshold
+from repro.core.placement.cost_aware import hysteresis_thresholds
 from repro.kvcache.migrate import MigrationPlan
 from repro.kvcache.paged import IMPORTANCE_EMA, PagedKVCache
 from repro.serving import control
@@ -95,6 +95,15 @@ class DevicePolicy:
         the plan capacity at the geometry constant and all state shapes
         static."""
         raise NotImplementedError
+
+    def recalibrate(self, state: Any, spec) -> Any:
+        """Re-derive any spec-dependent state values for a (possibly
+        degraded) `MemorySystemSpec` — called by the engine at chunk
+        boundaries when a tier fault changes the effective bandwidths.
+        Values only, never shapes (the zero-retrace pin). Default:
+        nothing in the state depends on the spec."""
+        del spec
+        return state
 
 
 def check_read_mask(cache: PagedKVCache, read_mask) -> None:
@@ -251,6 +260,13 @@ class CostAwarePolicy(DevicePolicy):
     Eq.(3)/(4) constants. Residents above `demote_ratio` of that
     threshold are protected from eviction — the hysteresis band that
     keeps ReactiveLRU-style churn bounded.
+
+    The thresholds are policy STATE, not trace constants: they ride the
+    scan carry as float32 scalars, so when the fault plane degrades the
+    memory system mid-stream the engine recalibrates them from the
+    degraded spec (`recalibrate`) without retracing the executable —
+    the payback bar rises with a harsher link, exactly as the economics
+    say it should.
     """
 
     name = "cost_aware"
@@ -258,8 +274,21 @@ class CostAwarePolicy(DevicePolicy):
 
     def __init__(self, *, cfg, geo):
         super().__init__(cfg=cfg, geo=geo)
-        self._t_promote = payback_threshold(cfg.spec, 1.0 / IMPORTANCE_EMA)
-        self._t_demote = self.demote_ratio * self._t_promote
+        self._base_spec = cfg.spec
+
+    def init_state(self, geo) -> Any:
+        """Payback thresholds for the base (fault-free) spec, carried
+        as data so tier faults can recalibrate them mid-stream."""
+        del geo
+        return self.recalibrate(None, self._base_spec)
+
+    def recalibrate(self, state: Any, spec) -> Any:
+        """Thresholds re-derived for `spec` (same shapes, new values)."""
+        del state
+        t_pro, t_dem = hysteresis_thresholds(
+            spec, 1.0 / IMPORTANCE_EMA, self.demote_ratio)
+        return {"t_promote": jnp.float32(t_pro),
+                "t_demote": jnp.float32(t_dem)}
 
     def plan(self, cache, state, active, budget,
              read_mask=None) -> PlanResult:
@@ -269,11 +298,11 @@ class CostAwarePolicy(DevicePolicy):
         host_score = control.slot_scores(imp, cache.host_owner)
         hbm_imp = control.slot_scores(imp, cache.hbm_owner)
         # residents warmer than the demote threshold are not victims
-        protected = (cache.hbm_owner >= 0) & (hbm_imp >= self._t_demote)
+        protected = (cache.hbm_owner >= 0) & (hbm_imp >= state["t_demote"])
         hbm_score = jnp.where(protected, _POS_INF, hbm_imp)
         plan, n_pro, n_dem = control.plan_by_score(
             cache, host_score, hbm_score, budget=budget,
-            promote_thresh=self._t_promote, active=active)
+            promote_thresh=state["t_promote"], active=active)
         return plan, state, (n_pro, n_dem)
 
 

@@ -52,6 +52,27 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+#: the exhaustive per-request dispositions (`Request.status`). Every
+#: request that enters `ServingEngine.serve` (or is refused at submit)
+#: ends in exactly one of these — the engine never raises mid-stream on
+#: a per-request condition.
+TERMINAL_STATUSES = ("ok", "rejected", "failed", "cancelled", "timeout")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestError:
+    """Typed per-request error record, attached to `Request.error`
+    whenever the terminal status is not "ok".
+
+    code — machine-readable reason (e.g. "empty_prompt", "zero_budget",
+           "infeasible_pages", "infeasible_context", "duplicate_rid",
+           "poisoned_logits", "deadline_exceeded", "cancelled").
+    detail — human-readable context for the report/logs.
+    """
+
+    code: str
+    detail: str = ""
+
 
 @dataclasses.dataclass
 class Request:
@@ -87,6 +108,23 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    #: terminal disposition ("pending" while in flight; ends in one of
+    #: TERMINAL_STATUSES — see module constant)
+    status: str = "pending"
+    #: typed reason whenever status != "ok"
+    error: Optional[RequestError] = None
+    #: wall-clock deadline in seconds from submit (None = no deadline);
+    #: checked by the engine at chunk boundaries -> status "timeout"
+    deadline_s: Optional[float] = None
+    #: cooperative cancellation flag (set via `cancel()`); honored by
+    #: the engine at chunk boundaries -> status "cancelled"
+    cancel_requested: bool = False
+
+    def cancel(self) -> None:
+        """Request cooperative cancellation: the engine reaps the
+        request at the next chunk boundary (queued requests are
+        dropped immediately; live ones release their lane + pages)."""
+        self.cancel_requested = True
 
     def __post_init__(self):
         if self.prompt is not None and not self.prompt_len:
@@ -143,6 +181,9 @@ class ContinuousBatcher:
         self.max_skips = max_skips
         self.step_idx = 0
         self.completed: List[Request] = []
+        #: requests refused at submit/admission (never held a slot);
+        #: each carries status="rejected" and a typed `error`
+        self.rejected: List[Request] = []
         #: lane<->request attribution ledger: one row per admission,
         #: in admission order. Lane indices are REUSED across the
         #: stream, so request identity over time comes from these
@@ -154,13 +195,38 @@ class ContinuousBatcher:
         self.bindings: List[Dict[str, int]] = []
 
     # ------------------------------------------------------------------ #
-    def submit(self, req: Request) -> None:
-        """Queue a request (FIFO) and reset its per-run state."""
+    def reject(self, req: Request, code: str, detail: str = "") -> None:
+        """Refuse a request with a typed error record: status
+        "rejected", never occupies a slot, lands in `self.rejected`.
+        Also the path for reaping QUEUED requests (deadline/cancel
+        before admission) — the stream keeps serving everyone else."""
+        req.status = "rejected"
+        req.error = RequestError(code=code, detail=detail)
+        req.phase = "done"
+        req.finished_step = self.step_idx
+        req.finished_at = time.time()
+        self.rejected.append(req)
+
+    def drop_queued(self, req: Request, status: str, code: str,
+                    detail: str = "") -> None:
+        """Reap a QUEUED request with a terminal status ("cancelled" /
+        "timeout"): removed from the queue, no pages to release, lands
+        in `rejected` (it never held a slot)."""
+        assert status in TERMINAL_STATUSES and status != "ok", status
+        self.queue.remove(req)
+        req.status = status
+        req.error = RequestError(code=code, detail=detail)
+        req.phase = "done"
+        req.finished_step = self.step_idx
+        req.finished_at = time.time()
+        self.rejected.append(req)
+
+    def _reset_run_state(self, req: Request) -> None:
+        """Reset per-run mutable state so a Request object can be
+        re-submitted (fresh serve call / sim) without carrying the
+        previous run's tokens, bindings, or disposition."""
         req.page_tokens = self.page_tokens
         req.arrived_step = self.step_idx
-        # reset per-run mutable state so a Request object can be
-        # re-submitted (fresh serve call / sim) without carrying the
-        # previous run's tokens or bindings
         req.started_step = -1
         req.finished_step = -1
         req.generated = 0
@@ -171,7 +237,42 @@ class ContinuousBatcher:
         req.submitted_at = time.time()
         req.first_token_at = None
         req.finished_at = None
+        req.status = "pending"
+        req.error = None
+        req.cancel_requested = False
+
+    def reject_submit(self, req: Request, code: str,
+                      detail: str = "") -> None:
+        """Reset + reject in one step — for callers (the engine) that
+        validate request CONTENTS (prompt presence, decode budget,
+        cache-capacity fit) above the scheduler's pool accounting."""
+        self._reset_run_state(req)
+        self.reject(req, code, detail)
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request (FIFO) and reset its per-run state.
+
+        Returns True when queued. Requests that can NEVER be served —
+        duplicate rid against a queued/live request (the bindings
+        ledger and `complete()` match by rid, so a duplicate would
+        corrupt per-request attribution), or a page footprint larger
+        than the whole pool — are rejected with a typed error instead
+        of poisoning the stream; the caller's other requests proceed.
+        """
+        self._reset_run_state(req)
+        live = {s.request.rid for s in self.slots if s.request is not None}
+        if any(q.rid == req.rid for q in self.queue) or req.rid in live:
+            self.reject(req, "duplicate_rid",
+                        f"rid {req.rid} already queued or live")
+            return False
+        if req.pages_needed > self.total_pages:
+            self.reject(
+                req, "infeasible_pages",
+                f"needs {req.pages_needed} pages, pool has "
+                f"{self.total_pages}")
+            return False
         self.queue.append(req)
+        return True
 
     def admit(self) -> List[Request]:
         """Admit queued requests into free slots (FIFO, starvation-bounded
@@ -186,6 +287,15 @@ class ContinuousBatcher:
             if lane is None:
                 break
             req = self.queue.popleft()
+            if req.pages_needed > self.total_pages:
+                # pool shrank below this request's footprint after it
+                # was queued — permanently unfittable; reject instead
+                # of requeueing forever (deadlock under shrink faults)
+                self.reject(
+                    req, "infeasible_pages",
+                    f"needs {req.pages_needed} pages, pool shrank to "
+                    f"{self.total_pages}")
+                continue
             if req.pages_needed <= self.free_pages:
                 self.slots[lane].request = req
                 req.lane = lane
@@ -204,10 +314,14 @@ class ContinuousBatcher:
             self.queue.appendleft(r)
         return admitted
 
-    def complete(self, req: Request) -> None:
-        """Release a live request's slot and pages (engine-driven
-        completion: EOS or budget, observed on device)."""
+    def complete(self, req: Request, status: str = "ok",
+                 error: Optional[RequestError] = None) -> None:
+        """Release a live request's slot and pages with a terminal
+        `status` (engine-driven: "ok" on EOS/budget; "failed" /
+        "cancelled" / "timeout" when the engine quarantines or reaps a
+        lane — pages release either way, the stream keeps serving)."""
         assert req.lane >= 0 and self.slots[req.lane].request is req, req
+        assert status in TERMINAL_STATUSES, status
         for b in reversed(self.bindings):
             if b["rid"] == req.rid and b["released_step"] < 0:
                 b["released_step"] = self.step_idx
@@ -218,7 +332,27 @@ class ContinuousBatcher:
         req.finished_at = time.time()
         req.phase = "done"
         req.lane = -1
+        req.status = status
+        req.error = error
         self.completed.append(req)
+
+    def resize_pool(self, delta: int) -> int:
+        """Grow (+) or shrink (-) the page pool by `delta` pages — the
+        scheduler half of a PoolFault. Reserved pages stay reserved:
+        a shrink can drive `free_pages` negative, which simply stalls
+        admission until completions release enough pages (admission
+        requires `pages_needed <= free_pages`). The pool floor is 0.
+        Returns the delta actually applied."""
+        delta = int(delta)
+        if self.total_pages + delta < 0:
+            delta = -self.total_pages
+        self.total_pages += delta
+        self.free_pages += delta
+        return delta
+
+    def live_requests(self) -> List[Request]:
+        """The requests currently bound to slots, in lane order."""
+        return [s.request for s in self.slots if s.request is not None]
 
     # ------------------------------------------------------------------ #
     def device_view(self) -> DeviceView:
@@ -275,5 +409,8 @@ class ContinuousBatcher:
         return live / len(self.slots)
 
     def page_pressure(self) -> float:
-        """Fraction of the KV page pool currently reserved."""
+        """Fraction of the KV page pool currently reserved (1.0 when a
+        shrink fault has emptied the pool entirely)."""
+        if self.total_pages <= 0:
+            return 1.0
         return 1.0 - self.free_pages / self.total_pages

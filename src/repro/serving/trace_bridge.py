@@ -422,6 +422,17 @@ def score_serve(rec: ServeTraceRecord, spec, *,
     Returns {"aggregate": {...}, "requests": {rid: {...}}}. When
     `report` (a ServeReport) is given, stamps `report.request_scores`
     and `report.headroom` with the same dicts.
+
+    Degraded streams score transparently: the telemetry a faulted
+    serve run captured already reflects what actually happened —
+    throttled migration commits, quarantined lanes' truncated traces,
+    the placements a fallen-back (static-behaving) policy stopped
+    improving — so the live totals here price the DEGRADED placement
+    against the same bounds, which is the honest headroom under
+    adversity. When the report carries degradation events
+    (`ServeReport.events`, see `repro.serving.faults`), their count
+    and the policy-fallback flag are stamped into the aggregate so a
+    scored stream names the faults that shaped it.
     """
     atts = attribute(rec)
     S = rec.num_steps
@@ -471,6 +482,11 @@ def score_serve(rec: ServeTraceRecord, spec, *,
             agg["static_total_s"] / agg["live_total_s"]
 
     if report is not None:
+        if getattr(report, "events", None):
+            agg["fault_events"] = float(len(report.events))
+            agg["policy_fallback"] = float(any(
+                e.get("kind") == "policy_fallback"
+                for e in report.events))
         report.request_scores.update(requests)
         report.headroom.update(agg)
     return {"aggregate": agg, "requests": requests}

@@ -1,0 +1,512 @@
+"""Chaos suite: the fault-injection plane + graceful degradation of the
+fused serve loop (repro.serving.faults, EXPERIMENTS.md
+§Fault-injection).
+
+The contract under test: with injected tier-degradation,
+migration-fault, pool-shrink, and NaN-lane schedules, `serve()`
+completes WITHOUT raising, every request ends in exactly one terminal
+status, fault-free requests' tokens are bitwise identical to a clean
+run, and the zero-retrace / one-serve-executable pins hold with the
+fault channel compiled in (fault params are data, not shape).
+
+Plus the scheduler-side robustness satellites: per-request rejection
+(duplicate rid, infeasible footprint), deadlines and cancellation, and
+a hypothesis-optional property test that the page pool + bindings
+ledger stay invariant under random admit/reject/complete/resize
+interleavings.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+from repro import configs
+from repro.core.latency_model import degraded_spec
+from repro.core.placement.cost_aware import (
+    hysteresis_thresholds, payback_threshold,
+)
+from repro.core.tiers import GH200, TPU_V5E
+from repro.kvcache.migrate import MigrationPlan
+from repro.models.model import Model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.faults import (
+    NO_FAULT_CAP, FaultPlane, MigrationFault, PoisonFault, PoolFault,
+    TierFault, throttle_plan,
+)
+from repro.serving.scheduler import (
+    TERMINAL_STATUSES, ContinuousBatcher, Request,
+)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.get_smoke("internlm2-1.8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.key(0))
+
+
+def _cfg(policy="importance", **kw):
+    return EngineConfig(max_context=128, hbm_fraction=0.25, policy=policy,
+                        attention_sparsity=0.0, spec=GH200,
+                        promote_thresh=0.005, telemetry_stride=4,
+                        prefill_chunk=16, **kw)
+
+
+def _mk_requests(vocab, n=4, seed=3, budget=6):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, vocab, (16 + 8 * (i % 2),)),
+                    max_new_tokens=budget) for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# the fault plane itself (pure data, no model needed)
+# --------------------------------------------------------------------------- #
+
+class TestFaultPlane:
+    def test_schedule_is_deterministic(self):
+        a = FaultPlane.random(7, steps=64, rids=[0, 1, 2])
+        b = FaultPlane.random(7, steps=64, rids=[0, 1, 2])
+        assert a == b
+        c = FaultPlane.random(8, steps=64, rids=[0, 1, 2])
+        assert a != c
+
+    def test_spec_at_composes_windows(self):
+        plane = FaultPlane(tier=(
+            TierFault(start=0, stop=10, link_scale=0.5),
+            TierFault(start=5, stop=10, dram_scale=0.5)))
+        assert plane.spec_at(20, GH200) == GH200        # outside windows
+        s = plane.spec_at(2, GH200)
+        assert s.link_bw == GH200.link_bw * 0.5
+        assert s.dram_bw == GH200.dram_bw
+        s2 = plane.spec_at(7, GH200)                    # overlap composes
+        assert s2.link_bw == GH200.link_bw * 0.5
+        assert s2.dram_bw == GH200.dram_bw * 0.5
+        assert s2.bw_ratio > GH200.bw_ratio             # harsher host tier
+
+    def test_commit_caps_window_and_sentinel(self):
+        plane = FaultPlane(migration=(
+            MigrationFault(start=6, stop=10, commit_frac=0.5),))
+        caps = plane.commit_caps(4, 8, budget_rows=10)  # chunk [4, 12)
+        assert caps.shape == (8,)
+        assert (caps[:2] == NO_FAULT_CAP).all()         # steps 4-5 clean
+        assert (caps[2:6] == 5).all()                   # steps 6-9 capped
+        assert (caps[6:] == NO_FAULT_CAP).all()         # steps 10-11 clean
+
+    def test_poison_steps_targets_bound_lane_only(self):
+        plane = FaultPlane(poison=(PoisonFault(rid=7, step=5),))
+        rids = np.array([3, 7, -1], np.int32)
+        mask = plane.poison_steps(4, 4, rids)           # chunk [4, 8)
+        assert mask.shape == (4, 3)
+        assert not mask[:, 0].any() and not mask[:, 2].any()
+        assert not mask[0, 1] and mask[1:, 1].all()     # from step 5 on
+        # the rid not bound this chunk -> nothing poisoned
+        assert not plane.poison_steps(4, 4,
+                                      np.array([3, 4], np.int32)).any()
+
+    def test_throttle_plan_masks_paired_rows(self):
+        plan = MigrationPlan.build(4, [(0, 0, 1, 2, 3), (0, 0, 4, 5, 6),
+                                       (1, 0, 7, 8, 9)],
+                                   [(0, 0, 2, 1, 3), (0, 0, 5, 4, 6)])
+        t = throttle_plan(plan, 1)
+        assert int((np.asarray(t.pro_layer) >= 0).sum()) == 1
+        # demote rows are masked with the SAME row mask (index-paired)
+        assert int((np.asarray(t.dem_layer) >= 0).sum()) == 1
+        full = throttle_plan(plan, NO_FAULT_CAP)
+        assert int((np.asarray(full.pro_layer) >= 0).sum()) == 3
+        none = throttle_plan(plan, 0)
+        assert not (np.asarray(none.pro_layer) >= 0).any()
+        assert not (np.asarray(none.dem_layer) >= 0).any()
+
+    def test_degraded_spec_scales_bandwidths_only(self):
+        d = degraded_spec(GH200, link_scale=0.25, dram_scale=0.5)
+        assert d.link_bw == GH200.link_bw * 0.25
+        assert d.dram_bw == GH200.dram_bw * 0.5
+        assert d.hbm_bw == GH200.hbm_bw
+        assert d.hbm_capacity == GH200.hbm_capacity
+        with pytest.raises(ValueError):
+            degraded_spec(GH200, link_scale=0.0)
+
+    def test_hysteresis_thresholds_track_link_degradation(self):
+        """Recalibration direction follows the read bottleneck. GH200's
+        read path is DRAM-bound (link 900 > dram 500): degrading the
+        link inflates the one-time move cost faster than the per-read
+        gain, so the payback bar RISES. TPU_V5E is already link-bound
+        (32 < 150): the same fault inflates the per-read gain faster —
+        host reads become ruinous — so promotion pays back sooner and
+        the bar FALLS. Both directions are what the cost_aware policy
+        must apply mid-stream."""
+        for spec in (GH200, TPU_V5E):
+            t_pro, t_dem = hysteresis_thresholds(spec, 10.0)
+            assert t_pro == payback_threshold(spec, 10.0)
+            assert 0 < t_dem < t_pro
+        g_pro, _ = hysteresis_thresholds(GH200, 10.0)
+        g_worse, _ = hysteresis_thresholds(
+            degraded_spec(GH200, link_scale=0.1), 10.0)
+        assert g_worse > g_pro
+        v_pro, _ = hysteresis_thresholds(TPU_V5E, 10.0)
+        v_worse, _ = hysteresis_thresholds(
+            degraded_spec(TPU_V5E, link_scale=0.1), 10.0)
+        assert v_worse < v_pro
+
+
+# --------------------------------------------------------------------------- #
+# the serve loop under injected fault schedules (the tentpole contract)
+# --------------------------------------------------------------------------- #
+
+class TestChaosServe:
+    def _clean(self, dense_model, policy="importance", **serve_kw):
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg(policy))
+        reqs = _mk_requests(model.cfg.vocab)
+        report = eng.serve(reqs, num_slots=2, seed=0, **serve_kw)
+        return eng, report
+
+    def test_full_fault_schedule_degrades_gracefully(self, dense_model):
+        """All four fault kinds at once: no raise, statuses exhaustive,
+        fault-free lanes bitwise identical, ONE executable."""
+        model, params = dense_model
+        eng, clean = self._clean(dense_model)
+        clean_out = {r.rid: list(r.output) for r in clean}
+        assert all(r.status == "ok" for r in clean)
+
+        plane = FaultPlane(
+            tier=(TierFault(start=2, stop=10, link_scale=0.1,
+                            dram_scale=0.5),),
+            migration=(MigrationFault(start=0, stop=24,
+                                      commit_frac=0.0),),
+            pool=(PoolFault(step=4, delta=-2),),
+            poison=(PoisonFault(rid=1, step=6),))
+        report = eng.serve(_mk_requests(model.cfg.vocab), num_slots=2,
+                           seed=0, faults=plane)
+        statuses = report.statuses
+        assert set(statuses) == {0, 1, 2, 3}
+        assert all(s in TERMINAL_STATUSES for s in statuses.values())
+        assert statuses[1] == "failed"
+        assert report.completed[0] is not None    # stream kept serving
+        faulted_out = {r.rid: list(r.output) for r in report.completed}
+        for rid, toks in clean_out.items():
+            if rid == 1:
+                continue
+            assert faulted_out[rid] == toks, rid  # bitwise unaffected
+        # fault params are data, not shape: clean + faulted runs share
+        # ONE serve executable (the zero-retrace pin under injection)
+        assert eng._serve_jit._cache_size() == 1
+        kinds = {e["kind"] for e in report.events}
+        assert {"tier_degradation", "migration_fault", "pool_resize",
+                "logit_poison"} <= kinds
+
+    def test_poisoned_lane_quarantined_tokens_truncated(self, dense_model):
+        """The poisoned request keeps its pre-poison tokens, ends
+        "failed" with a typed error, and its pages are reclaimed (a
+        queued successor still gets served)."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=5, budget=8)
+        plane = FaultPlane(poison=(PoisonFault(rid=0, step=2),))
+        report = eng.serve(reqs, num_slots=2, seed=0, faults=plane)
+        bad = next(r for r in report.completed if r.rid == 0)
+        assert bad.status == "failed"
+        assert bad.error.code == "poisoned_logits"
+        assert len(bad.output) < 8                # truncated, not full
+        others = [r for r in report.completed if r.rid != 0]
+        assert all(r.status == "ok" and len(r.output) == 8
+                   for r in others)               # lane was reclaimed
+
+    def test_migration_fault_drops_commits(self, dense_model):
+        """A full-drop window zeroes committed migrations in telemetry
+        (the priced placement is the committed one), tokens unchanged."""
+        model, params = dense_model
+        eng, clean = self._clean(dense_model)
+        clean_out = {r.rid: list(r.output) for r in clean}
+        clean_moves = sum(s.m_in + s.m_out for s in eng.stats)
+        plane = FaultPlane(migration=(
+            MigrationFault(start=0, stop=10_000, commit_frac=0.0),))
+        report = eng.serve(_mk_requests(model.cfg.vocab), num_slots=2,
+                           seed=0, faults=plane)
+        assert {r.rid: list(r.output)
+                for r in report.completed} == clean_out
+        faulted_moves = sum(s.m_in + s.m_out for s in eng.stats)
+        assert faulted_moves == 0
+        assert faulted_moves <= clean_moves
+        assert eng._serve_jit._cache_size() == 1
+
+    def test_tier_fault_reprices_and_recalibrates(self, dense_model):
+        """A degraded window makes the SAME traffic cost more, and with
+        the cost_aware policy the payback thresholds recalibrate (the
+        event log shows it); a harsh enough ratio trips the fallback.
+        hbm_scale degrades too: the small stream may be fully
+        HBM-resident, and pricing must reflect whichever tier the
+        reads actually hit."""
+        model, params = dense_model
+        eng, clean = self._clean(dense_model, policy="cost_aware")
+        clean_total = sum(s.modeled_latency_s for s in eng.stats)
+        plane = FaultPlane(tier=(
+            TierFault(start=0, stop=10_000, hbm_scale=0.5,
+                      link_scale=0.01),))
+        report = eng.serve(_mk_requests(model.cfg.vocab), num_slots=2,
+                           seed=0, faults=plane)
+        degraded_total = sum(s.modeled_latency_s for s in eng.stats)
+        assert degraded_total > clean_total
+        kinds = [e["kind"] for e in report.events]
+        assert "payback_recalibration" in kinds
+        # link x0.01 (hbm x0.5) pushes bw_ratio ~28x past base: fallback
+        fb = [e for e in report.events
+              if e["kind"] == "policy_fallback"]
+        assert fb and fb[0]["reason"] == "tier_ratio"
+        assert all(s in TERMINAL_STATUSES
+                   for s in report.statuses.values())
+        assert eng._serve_jit._cache_size() == 1
+
+    def test_commit_fault_streak_falls_back_to_static(self, dense_model):
+        """Persistent full-drop windows trip the consecutive-commit
+        fallback; the stream still completes every request."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg(
+            fallback_commit_faults=2))
+        plane = FaultPlane(migration=(
+            MigrationFault(start=0, stop=10_000, commit_frac=0.0),))
+        report = eng.serve(_mk_requests(model.cfg.vocab, budget=10),
+                           num_slots=2, seed=0, faults=plane)
+        fb = [e for e in report.events if e["kind"] == "policy_fallback"]
+        assert fb and fb[0]["reason"] == "commit_faults"
+        assert all(s == "ok" for s in report.statuses.values())
+
+    def test_pool_shrink_wave_no_deadlock(self, dense_model):
+        """A shrink below a queued request's footprint rejects it
+        (typed) instead of deadlocking; the rest complete; a recovery
+        delta lets later admissions proceed."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=6, budget=8)
+        # total pool = 2 lanes * 8 pages (ctx 128 / page 16 = 8); each
+        # request needs 2-3 pages. Shrink to nearly nothing mid-stream,
+        # recover later.
+        plane = FaultPlane(pool=(PoolFault(step=4, delta=-14),
+                                 PoolFault(step=24, delta=10)))
+        report = eng.serve(reqs, num_slots=2, seed=0, faults=plane)
+        statuses = report.statuses
+        assert len(statuses) == 6
+        assert all(s in TERMINAL_STATUSES for s in statuses.values())
+        assert any(s == "ok" for s in statuses.values())
+        for r in report.rejected:
+            assert r.error is not None and r.error.code in (
+                "infeasible_pages", "admission_stalled")
+
+    def test_random_seeded_plane_always_terminates(self, dense_model):
+        """FaultPlane.random schedules across seeds: serve never
+        raises, statuses stay exhaustive, executable stays at one."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        for seed in range(3):
+            reqs = _mk_requests(model.cfg.vocab, n=4, budget=6)
+            plane = FaultPlane.random(
+                seed, steps=48, rids=[r.rid for r in reqs])
+            report = eng.serve(reqs, num_slots=2, seed=0, faults=plane)
+            statuses = report.statuses
+            assert len(statuses) == 4, (seed, statuses)
+            assert all(s in TERMINAL_STATUSES
+                       for s in statuses.values()), (seed, statuses)
+        assert eng._serve_jit._cache_size() == 1
+
+
+# --------------------------------------------------------------------------- #
+# deadline / cancellation / rejection semantics
+# --------------------------------------------------------------------------- #
+
+class TestDegradationSemantics:
+    def test_deadline_times_out_live_request(self, dense_model):
+        """deadline_s=0 expires at the first boundary: the request ends
+        "timeout", pages release, neighbors are untouched."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=3, budget=64)
+        reqs[1].deadline_s = 0.0
+        report = eng.serve(reqs, num_slots=2, seed=0)
+        statuses = report.statuses
+        assert statuses[1] == "timeout"
+        victim = next(r for r in report.completed + report.rejected
+                      if r.rid == 1)
+        assert victim.error.code == "deadline_exceeded"
+        assert statuses[0] == "ok" and statuses[2] == "ok"
+
+    def test_precancelled_request_reaped(self, dense_model):
+        """cancel() before serving starts: the request ends
+        "cancelled" at the first boundary without blocking the rest."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=3, budget=32)
+        report_holder = {}
+        # submit resets cancel_requested, so cancel must land after
+        # submit: patch in via a tiny subclass hook is overkill — use
+        # deadline-free cancel through the batcher the engine exposes
+        class Cancelling(ServingEngine):
+            def _admit_lane(self, req, hs):
+                super()._admit_lane(req, hs)
+                if req.rid == 1:
+                    req.cancel()
+        eng = Cancelling(model, params, _cfg())
+        report = eng.serve(reqs, num_slots=2, seed=0)
+        statuses = report.statuses
+        assert statuses[1] == "cancelled"
+        assert statuses[0] == "ok" and statuses[2] == "ok"
+        del report_holder
+
+    def test_duplicate_rid_rejected(self, dense_model):
+        model, params = dense_model
+        rng = np.random.default_rng(2)
+        eng = ServingEngine(model, params, _cfg())
+        a = Request(rid=5, prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                    max_new_tokens=3)
+        b = Request(rid=5, prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                    max_new_tokens=3)
+        report = eng.serve([a, b], num_slots=2, seed=0)
+        assert a.status == "ok" and len(a.output) == 3
+        assert b.status == "rejected"
+        assert b.error.code == "duplicate_rid"
+
+    def test_oversized_footprint_rejected_midstream(self, dense_model):
+        """A request whose page footprint exceeds the whole pool is
+        rejected at submit — it never crashes the stream after other
+        requests have run (the old engine.py:688 RuntimeError)."""
+        model, params = dense_model
+        rng = np.random.default_rng(4)
+        eng = ServingEngine(model, params, _cfg())
+        good = [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                        max_new_tokens=4) for i in range(2)]
+        # 3 pages needed vs a 2-page pool; context-feasible (
+        # 32+16 <= 128) so it reaches the scheduler's pool check
+        big = Request(rid=9, prompt=rng.integers(0, model.cfg.vocab,
+                                                 (32,)),
+                      max_new_tokens=16)
+        report = eng.serve(good + [big], num_slots=2, seed=0,
+                           total_pages=2)
+        assert big.status == "rejected"
+        assert big.error.code == "infeasible_pages"
+        assert all(r.status == "ok" and len(r.output) == 4
+                   for r in report.completed)
+
+
+# --------------------------------------------------------------------------- #
+# property test: pool + ledger invariants under random interleavings
+# --------------------------------------------------------------------------- #
+
+def _check_invariants(b: ContinuousBatcher) -> None:
+    """The accounting that must hold after EVERY operation."""
+    reserved = sum(s.request.pages_needed for s in b.slots
+                   if s.request is not None)
+    # conservation: reserved + free == pool (free may be negative
+    # after a shrink; reserved pages stay reserved)
+    assert reserved + b.free_pages == b.total_pages, \
+        (reserved, b.free_pages, b.total_pages)
+    # ledger: open rows correspond 1:1 with live slots, closed rows
+    # never resurrect
+    open_rows = [r for r in b.bindings if r["released_step"] < 0]
+    live_rids = sorted(s.request.rid for s in b.slots
+                       if s.request is not None)
+    assert sorted(r["rid"] for r in open_rows) == live_rids
+    for row in b.bindings:
+        if row["released_step"] >= 0:
+            assert row["released_step"] >= row["admitted_step"]
+    # terminal requests hold terminal statuses; nothing live does
+    for r in b.completed:
+        assert r.status in TERMINAL_STATUSES
+    for r in b.rejected:
+        assert r.status in TERMINAL_STATUSES and r.status != "ok"
+    for s in b.slots:
+        if s.request is not None:
+            assert s.request.status == "pending"
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 7)),
+                min_size=1, max_size=60),
+       st.integers(0, 2**32 - 1))
+def test_pool_and_ledger_invariants_hold(ops, seed):
+    """free_pages accounting + the bindings ledger stay invariant under
+    random admit/reject/fail/cancel/complete/resize interleavings."""
+    rng = np.random.default_rng(seed)
+    b = ContinuousBatcher(num_slots=3, total_pages=12, page_tokens=16,
+                          max_skips=2)
+    next_rid = [0]
+
+    def submit(arg):
+        # footprints from tiny to pool-busting; occasional duplicate
+        dup = arg == 7 and (b.queue or b.live_requests())
+        if dup:
+            pool = [q.rid for q in b.queue] + \
+                [r.rid for r in b.live_requests()]
+            rid = pool[arg % len(pool)]
+        else:
+            rid = next_rid[0]
+            next_rid[0] += 1
+        b.submit(Request(rid=rid, prompt_len=16 * (1 + arg % 4),
+                         max_new_tokens=8))
+
+    def admit(arg):
+        b.admit()
+
+    def complete(arg):
+        live = b.live_requests()
+        if live:
+            status = TERMINAL_STATUSES[arg % len(TERMINAL_STATUSES)]
+            if status == "rejected":     # not a complete() status
+                status = "failed"
+            b.complete(live[arg % len(live)], status)
+
+    def drop(arg):
+        if b.queue:
+            q = list(b.queue)[arg % len(b.queue)]
+            b.drop_queued(q, "cancelled" if arg % 2 else "timeout",
+                          "chaos")
+
+    def resize(arg):
+        b.resize_pool(int(rng.integers(-6, 7)))
+
+    def tick(arg):
+        b.step_idx += 1
+
+    actions = [submit, admit, complete, drop, resize, tick]
+    for op, arg in ops:
+        actions[op](arg)
+        _check_invariants(b)
+    # drain: everything still live/queued can always be retired
+    while b.queue:
+        b.drop_queued(b.queue[0], "cancelled", "drain")
+        _check_invariants(b)
+    for r in list(b.live_requests()):
+        b.complete(r, "ok")
+        _check_invariants(b)
+    assert b.free_pages == b.total_pages
+
+
+def test_pool_ledger_smoke_without_hypothesis():
+    """Deterministic mini-version of the property test so the invariant
+    coverage survives images without hypothesis installed."""
+    b = ContinuousBatcher(num_slots=2, total_pages=8, page_tokens=16,
+                          max_skips=2)
+    reqs = [Request(rid=i, prompt_len=32, max_new_tokens=16)
+            for i in range(4)]
+    for r in reqs:
+        assert b.submit(r)
+    _check_invariants(b)
+    assert len(b.admit()) == 2                    # 3 pages each, pool 8
+    _check_invariants(b)
+    b.resize_pool(-5)                             # free: 2 -> -3
+    _check_invariants(b)
+    assert b.free_pages < 0
+    assert not b.admit()                          # stalled, not crashed
+    b.complete(reqs[0], "failed")
+    _check_invariants(b)
+    b.complete(reqs[1], "ok")
+    _check_invariants(b)
+    b.resize_pool(5)
+    assert len(b.admit()) == 2                    # recovery admits both
+    _check_invariants(b)
+    for r in (reqs[2], reqs[3]):
+        b.complete(r, "ok")
+    _check_invariants(b)
+    assert b.free_pages == b.total_pages == 8
+    assert {r.rid: r.status for r in b.completed} == \
+        {0: "failed", 1: "ok", 2: "ok", 3: "ok"}

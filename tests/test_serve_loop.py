@@ -200,23 +200,42 @@ class TestServeStream:
         assert all(len(v) == 4 for v in second.values())
 
     def test_zero_budget_request_rejected(self, dense_model):
+        """An invalid decode budget is a per-request rejection with a
+        typed error, never a batch-wide abort: the valid neighbor in
+        the same stream still completes normally."""
         model, params = dense_model
+        rng = np.random.default_rng(5)
         eng = ServingEngine(model, params, _cfg())
-        with pytest.raises(ValueError, match="max_new_tokens"):
-            eng.serve([Request(rid=0, prompt=np.arange(8),
-                               max_new_tokens=0)], num_slots=1)
+        bad = Request(rid=0, prompt=np.arange(8), max_new_tokens=0)
+        good = Request(rid=1,
+                       prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                       max_new_tokens=4)
+        report = eng.serve([bad, good], num_slots=1)
+        assert bad.status == "rejected"
+        assert bad.error.code == "zero_budget"
+        assert [r.rid for r in report.rejected] == [0]
+        assert good.status == "ok" and len(good.output) == 4
+        assert report.statuses == {0: "rejected", 1: "ok"}
 
-    def test_infeasible_request_raises(self, dense_model):
+    def test_infeasible_request_rejected(self, dense_model):
+        """A prompt+budget over the cache capacity is rejected at
+        submit (typed error), not raised after the stream started."""
         model, params = dense_model
         rng = np.random.default_rng(5)
         # pool padding (pad_to=16) gives max_context=128 a 512-token
         # capacity; exceed THAT, not the nominal context
-        reqs = [Request(rid=0, prompt=rng.integers(0, model.cfg.vocab,
-                                                   (32,)),
-                        max_new_tokens=600)]
+        bad = Request(rid=0, prompt=rng.integers(0, model.cfg.vocab,
+                                                 (32,)),
+                      max_new_tokens=600)
+        good = Request(rid=1,
+                       prompt=rng.integers(0, model.cfg.vocab, (16,)),
+                       max_new_tokens=3)
         eng = ServingEngine(model, params, _cfg())
-        with pytest.raises(ValueError, match="exceed cache capacity"):
-            eng.serve(reqs, num_slots=1)
+        report = eng.serve([bad, good], num_slots=1)
+        assert bad.status == "rejected"
+        assert bad.error.code == "infeasible_context"
+        assert good.status == "ok" and len(good.output) == 3
+        assert len(report.completed) == 1
 
 
 class TestServeSampling:
@@ -435,11 +454,17 @@ class TestSchedulerEngineProtocol:
     def test_starvation_bound_limits_leapfrogging(self):
         """The starvation bound caps how many blocked requests may be
         passed over per admission round: with two page-hungry requests
-        at the head, max_skips=1 admits nothing (the fitting smalls
-        may not leapfrog further), max_skips=2 admits them."""
+        at the head — FEASIBLE (they fit the whole pool) but blocked
+        behind a hog's pages — max_skips=1 admits nothing (the fitting
+        smalls may not leapfrog further), max_skips=2 admits them.
+        (Requests that could NEVER fit are rejected at submit, not
+        skipped — see test_oversized_footprint_rejected_at_submit.)"""
         def build(max_skips):
-            cb = ContinuousBatcher(num_slots=4, total_pages=4,
+            cb = ContinuousBatcher(num_slots=4, total_pages=10,
                                    max_skips=max_skips)
+            hog = Request(rid=9, prompt_len=64, max_new_tokens=32)
+            cb.submit(hog)                  # 6 pages -> 4 left free
+            assert [r.rid for r in cb.admit()] == [9]
             cb.submit(Request(rid=0, prompt_len=64, max_new_tokens=64))
             cb.submit(Request(rid=1, prompt_len=64, max_new_tokens=64))
             cb.submit(Request(rid=2, prompt_len=16, max_new_tokens=8))
