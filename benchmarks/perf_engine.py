@@ -75,6 +75,17 @@ An eighth leg is the robustness smoke (EXPERIMENTS.md
            the serve-chunk executable count stays at ONE across both
            runs — faults are data, not shape.
 
+A ninth leg is the scaling surface (EXPERIMENTS.md §Mesh-sharding):
+
+  mesh-sweep — the serve stream on host-device meshes of increasing
+           size: pure data-parallel points (data=n, model=1) with lanes
+           scaled to devices, plus one tensor-parallel point at the top
+           count. Records wall tokens/s + TTFT/TPOT p50 per point into
+           rows["mesh_sweep"]; the CI mesh leg additionally asserts ONE
+           serve executable per mesh (sharding never forks the cache).
+           Forced host devices share physical cores, so the curve is
+           descriptive data, never a speedup gate.
+
 Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite; the file is
 stamped with `schema_version` + the producing `commit` so trajectory
 tooling can parse it). The headline is fused/host steps-per-second;
@@ -84,6 +95,9 @@ length (zero migration-driven or admission-driven retraces).
 Run:  PYTHONPATH=src python benchmarks/perf_engine.py
       PYTHONPATH=src python benchmarks/perf_engine.py --policy-sweep
       (generate + serve policy sweeps only, full geometry)
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python benchmarks/perf_engine.py --mesh-sweep
+      (scaling sweep only, appended into rows["mesh_sweep"])
 CI:   PYTHONPATH=src python benchmarks/perf_engine.py --ci
       (reduced geometry; additionally asserts fused >= eager steps/s,
       chunked-admission TTFT < eager-admission TTFT for the mid-stream
@@ -130,7 +144,10 @@ HOST_STEPS = 8          # the host baseline is too slow for more
 #: and the schema_version/commit provenance stamp itself.
 #: v3: added the chaos smoke row (terminal-status counts, fault-event
 #: count, bitwise-unaffected pin) from the fault-injection plane.
-BENCH_SCHEMA_VERSION = 3
+#: v4: added rows["mesh_sweep"] (`--mesh-sweep`: wall tokens/s +
+#: TTFT/TPOT p50 per device count over host-device meshes, plus one
+#: tensor-parallel point; EXPERIMENTS.md §Mesh-sharding).
+BENCH_SCHEMA_VERSION = 4
 
 
 def _git_commit() -> str:
@@ -593,6 +610,104 @@ def _chaos_smoke(model, params):
     }
 
 
+def _mesh_point(model, params, mesh, *, num_slots, ci):
+    """One scaling point: the mixed serve stream on `mesh` (None = the
+    single-device baseline). Returns the BENCH row for this point."""
+    stride = 8
+    eng = ServingEngine(model, params, EngineConfig(
+        max_context=128, hbm_fraction=0.25, policy="importance",
+        attention_sparsity=0.0, spec=GH200, promote_thresh=1e-4,
+        telemetry_stride=stride, prefill_chunk=16), mesh=mesh)
+    rng = np.random.default_rng(0)
+    n_requests = 2 * num_slots if ci else 3 * num_slots
+
+    def mk():
+        return [Request(rid=i,
+                        prompt=rng.integers(0, model.cfg.vocab,
+                                            (32 + 16 * (i % 3),)),
+                        max_new_tokens=stride // 2 + 2 * (i % 3))
+                for i in range(n_requests)]
+
+    eng.serve(mk(), num_slots=num_slots, seed=0)            # compile
+    reqs = mk()
+    t0 = time.perf_counter()
+    report = eng.serve(reqs, num_slots=num_slots, seed=1)
+    wall = time.perf_counter() - t0
+    exes = eng._serve_jit._cache_size()
+    if ci:
+        # the scaling gate is STRUCTURAL, not a speedup assertion:
+        # forced host devices share the same physical cores, so the
+        # curve's shape is honest data, not a pass/fail criterion
+        assert exes == 1, (mesh, exes)
+        assert all(s == "ok" for s in report.statuses.values()), \
+            report.statuses
+    total = sum(len(r.output) for r in report)
+    return {
+        "devices": 1 if mesh is None else mesh.devices.size,
+        "mesh": None if mesh is None else dict(mesh.shape),
+        "num_slots": num_slots,
+        "requests": n_requests,
+        "wall_tokens_per_s": total / wall,
+        "ttft_p50_s": report.ttft.get("p50"),
+        "tpot_p50_s": report.tpot.get("p50"),
+        "serve_chunk_executables": exes,
+    }
+
+
+def _mesh_sweep(model, params, *, ci):
+    """tokens/s + TTFT/TPOT vs device count over host-device meshes.
+
+    Sweeps pure data-parallel meshes (data=n, model=1) for every
+    available power-of-two device count (lanes scale with devices so
+    per-device work is constant), plus one tensor-parallel point
+    (data=n/2, model=2) at the largest count — the kv_heads/pages
+    sharding path. On a 1-device host this degenerates to the baseline
+    point, so `--mesh-sweep` runs anywhere; the CI mesh leg forces 8
+    host devices for the real curve."""
+    from repro.launch.mesh import make_test_mesh
+    counts = [n for n in (1, 2, 4, 8) if n <= jax.device_count()]
+    points = {}
+    for n in counts:
+        mesh = None if n == 1 else make_test_mesh(data=n, model=1)
+        points[f"{n}x1"] = _mesh_point(model, params, mesh,
+                                       num_slots=2 * n, ci=ci)
+    top = max(counts)
+    if top >= 4:
+        points[f"{top // 2}x2"] = _mesh_point(
+            model, params, make_test_mesh(data=top // 2, model=2),
+            num_slots=top, ci=ci)
+    return {"devices_available": jax.device_count(), "points": points}
+
+
+def run_mesh_sweep(print_csv: bool = True, ci: bool = False):
+    """Standalone `--mesh-sweep`: the scaling curve only, appended into
+    an existing BENCH_engine.json when present (the CI mesh leg runs
+    this under --xla_force_host_platform_device_count=8 and uploads the
+    merged artifact)."""
+    cfg = configs.get_smoke("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    sweep = _mesh_sweep(model, params, ci=ci)
+    try:
+        with open("BENCH_engine.json") as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {"rows": {}}
+    result.setdefault("rows", {})["mesh_sweep"] = sweep
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(_stamp(result), f, indent=2)
+    if print_csv:
+        for label, row in sweep["points"].items():
+            print(f"mesh/{label}/wall_tokens_per_s,"
+                  f"{1e6 / row['wall_tokens_per_s']:.3f},"
+                  f"{row['wall_tokens_per_s']:.3f}")
+            if row["ttft_p50_s"] is not None:
+                print(f"mesh/{label}/ttft_p50,"
+                      f"{row['ttft_p50_s'] * 1e6:.3f},"
+                      f"{row['ttft_p50_s']:.6f}")
+    return sweep
+
+
 def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     cfg = configs.get_smoke("internlm2-1.8b")
     model = Model(cfg)
@@ -602,6 +717,15 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
         steps = min(steps, 2 * STRIDE)
 
     result = {"steps": steps, "stride": STRIDE, "ci": ci, "rows": {}}
+    # rows produced only by the standalone --mesh-sweep leg survive a
+    # default rerun, so the committed artifact keeps its scaling curve
+    try:
+        with open("BENCH_engine.json") as f:
+            prior = json.load(f).get("rows", {})
+        if "mesh_sweep" in prior:
+            result["rows"]["mesh_sweep"] = prior["mesh_sweep"]
+    except (OSError, ValueError):
+        pass
     rows = []
     for policy in ("static", "importance"):
         host_sps = _time_steps(
@@ -764,8 +888,15 @@ if __name__ == "__main__":
     ap.add_argument("--policy-sweep", action="store_true",
                     help="run only the device-policy sweep (steps/s, hit "
                          "fraction, fraction-of-SA-upper-bound per policy)")
+    ap.add_argument("--mesh-sweep", action="store_true",
+                    help="run only the mesh scaling sweep (tokens/s + "
+                         "TTFT/TPOT per device count; pair with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 for the full curve)")
     args = ap.parse_args()
-    if args.policy_sweep:
+    if args.mesh_sweep:
+        run_mesh_sweep(ci=args.ci)
+    elif args.policy_sweep:
         run_policy_sweep(steps=args.steps)
     else:
         run(steps=args.steps, ci=args.ci)

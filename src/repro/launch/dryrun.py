@@ -46,6 +46,7 @@ RESULTS = "dryrun_results.jsonl"
 
 
 def cells(archs=None, shapes=None):
+    """Enumerate (arch, shape, RUN|SKIP, reason) cells for the sweep."""
     from repro import configs
     out = []
     for arch in (archs or configs.all_arch_names()):
@@ -118,6 +119,10 @@ def _abstract_state(model, batch, context):
 # ---------------------------------------------------------------------------
 
 def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    """Lower + compile one cell under its mesh; returns the cost record.
+
+    No arrays are allocated — inputs are ShapeDtypeStructs, so sharding
+    mismatches and compile-time OOM surface here, cheaply."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -259,6 +264,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
 # ---------------------------------------------------------------------------
 
 def main():
+    """CLI driver: one in-process cell, or the subprocess-per-cell sweep."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

@@ -64,6 +64,8 @@ def _dims_of(shape_str: str) -> List[int]:
 
 
 class Instr:
+    """One parsed HLO instruction: name, shape string, op, operand refs."""
+
     __slots__ = ("name", "shape", "op", "operands", "line")
 
     def __init__(self, name, shape, op, operands, line):
@@ -84,6 +86,7 @@ _CALLED_RE = re.compile(
 
 
 def parse_module(hlo: str) -> Dict[str, List[Instr]]:
+    """Parse optimized HLO text into {computation name: [Instr, ...]}."""
     comps: Dict[str, List[Instr]] = {}
     cur: Optional[str] = None
     for line in hlo.splitlines():
@@ -112,7 +115,7 @@ def parse_module(hlo: str) -> Dict[str, List[Instr]]:
 
 
 class CostResult(dict):
-    pass
+    """Dict subclass reserved for typed cost results (plain dict today)."""
 
 
 def _root_of(instrs: List[Instr]) -> Optional[Instr]:
@@ -206,6 +209,11 @@ def _fusion_bytes(ins: Instr, table, comps, symtab, called,
 
 def analyze(hlo: str, detail: bool = False,
             project: bool = True) -> dict:
+    """Trip-count-weighted flops/bytes/collectives for an HLO module.
+
+    `project=True` applies the TPU projections documented in the module
+    docstring (free converts, sliced fusion operands); `detail=True`
+    additionally returns the 25 most expensive weighted instructions."""
     comps = parse_module(hlo)
     # symbol tables per computation (name -> shape string)
     symtab = {c: {i.name: i.shape for i in instrs}

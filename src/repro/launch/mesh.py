@@ -11,15 +11,24 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The 256-chip (`data`, `model`) pod mesh — or, with
+    `multi_pod`, the 512-chip (`pod`, `data`, `model`) twin-pod one
+    the dry-run cost tables assume."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many (host) devices tests have."""
+    """Small (`data`, `model`) mesh over however many devices exist.
+
+    On a CPU-only box, `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+    (set BEFORE jax initializes) fakes N host devices — how CI and the
+    README's "Scaling out" quickstart exercise the sharded serve loop
+    without accelerators."""
     return jax.make_mesh((data, model), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    """{axis name: size}, e.g. {"data": 2, "model": 2}."""
+    return dict(mesh.shape)

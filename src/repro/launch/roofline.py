@@ -113,6 +113,7 @@ def roofline_terms(rec: dict, chip=TPU_V5E_CHIP) -> dict:
 
 
 def load_results(path: str = "dryrun_results.jsonl") -> List[dict]:
+    """Load dry-run records, keeping the last one per (arch, shape, mesh)."""
     out = []
     with open(path) as f:
         for line in f:
@@ -127,6 +128,7 @@ def load_results(path: str = "dryrun_results.jsonl") -> List[dict]:
 
 
 def table(path: str = "dryrun_results.jsonl") -> str:
+    """Render the roofline terms of every cell as an aligned text table."""
     rows = []
     header = (f"{'arch':26s} {'shape':12s} {'mesh':6s} {'dom':10s} "
               f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "

@@ -1,30 +1,155 @@
-"""Serving driver: two-tier paged-KV engine behind a continuous batcher.
+"""Serving entry point: the fused two-tier engine, optionally sharded
+across a device mesh.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-      --smoke --policy importance --sparsity 0.6 --requests 8
+Single device (the default) and a meshed run drive the SAME
+`ServingEngine.serve` loop — the mesh only changes where the arrays
+live (EXPERIMENTS.md §Mesh-sharding). On a CPU-only box, fake the
+devices with XLA host devices (the flag must be set before jax
+initializes, i.e. in the environment, not in code):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python -m repro.launch.serve --smoke \\
+      --mesh data=2,model=2 --requests 6 --new-tokens 8
+
+`--parity` runs the stream twice — unmeshed, then on the mesh — and
+checks the contract the tests pin: identical tokens and terminal
+statuses, tolerance-close hit/bound fractions, zero retraces under the
+mesh. Exit status is the check result, so CI can call it directly.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
+import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.sa import SAConfig
 from repro.core.tiers import SPECS
+from repro.launch.mesh import make_test_mesh
 from repro.models.model import Model
+from repro.serving import trace_bridge
 from repro.serving.engine import EngineConfig, ServingEngine
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.policies import policy_names
+from repro.serving.scheduler import Request
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def parse_mesh(spec: str):
+    """'data=2,model=2' -> a (data, model) test mesh; '' -> None.
+
+    Raises a SystemExit with the XLA_FLAGS hint when the host has too
+    few devices for the requested shape."""
+    if not spec:
+        return None
+    sizes = {"data": 1, "model": 1}
+    for part in spec.split(","):
+        name, _, val = part.partition("=")
+        if name.strip() not in sizes or not val.strip().isdigit():
+            raise SystemExit(
+                f"--mesh wants 'data=N,model=M', got {spec!r}")
+        sizes[name.strip()] = int(val)
+    need = sizes["data"] * sizes["model"]
+    have = jax.device_count()
+    if need > have:
+        raise SystemExit(
+            f"--mesh {spec} needs {need} devices, found {have}. On a "
+            f"CPU host, set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={need} (before jax starts) to fake them.")
+    return make_test_mesh(data=sizes["data"], model=sizes["model"])
+
+
+def build_requests(vocab: int, n: int, prompt_len: int,
+                   new_tokens: int, seed: int = 0):
+    """A mixed request stream: three page-rounded prompt lengths and
+    staggered budgets, so admissions/completions churn lanes."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab,
+                                        (prompt_len + 16 * (i % 3),)),
+                    max_new_tokens=new_tokens + 2 * (i % 3))
+            for i in range(n)]
+
+
+def run_stream(model, params, args, mesh, *, trace: bool = False):
+    """Serve one stream; returns (engine, ServeReport, wall seconds)."""
+    cfg = EngineConfig(
+        max_context=args.prompt_len + 32 + args.new_tokens + 16,
+        hbm_fraction=args.hbm_fraction, policy=args.policy,
+        attention_sparsity=args.sparsity, spec=SPECS[args.spec],
+        telemetry_stride=args.stride, prefill_chunk=16,
+        trace_telemetry=trace)
+    eng = ServingEngine(model, params, cfg, mesh=mesh)
+    reqs = build_requests(model.cfg.vocab, args.requests,
+                          args.prompt_len, args.new_tokens)
+    t0 = time.perf_counter()
+    report = eng.serve(reqs, num_slots=args.batch_slots, seed=args.seed)
+    return eng, report, time.perf_counter() - t0
+
+
+def check_parity(model, params, args, mesh) -> bool:
+    """Single-device vs meshed serve over the same stream.
+
+    Pins: identical tokens + terminal statuses per request (greedy
+    argmax absorbs the mesh's float-reduction reassociation), zero
+    retraces under the mesh, and aggregate hit/bound fractions within
+    tolerance (migration choices may flip on ulp-level importance-EMA
+    differences, which moves telemetry without touching tokens)."""
+    ref_eng, ref, _ = run_stream(model, params, args, None, trace=True)
+    mesh_eng, got, _ = run_stream(model, params, args, mesh, trace=True)
+
+    ok = True
+    exes = mesh_eng._serve_jit._cache_size()
+    if exes != 1:
+        print(f"PARITY FAIL: {exes} serve executables under mesh")
+        ok = False
+    if ref.statuses != got.statuses:
+        print(f"PARITY FAIL: statuses {ref.statuses} != {got.statuses}")
+        ok = False
+    ref_out = {r.rid: list(r.output) for r in ref}
+    got_out = {r.rid: list(r.output) for r in got}
+    for rid in sorted(ref_out):
+        if ref_out[rid] != got_out.get(rid):
+            print(f"PARITY FAIL: request {rid} tokens diverge\n"
+                  f"  1-device: {ref_out[rid]}\n"
+                  f"  meshed:   {got_out.get(rid)}")
+            ok = False
+    sa_cfg = SAConfig(max_evaluations=6, iters_per_level=2, seed=0)
+    spec = SPECS[args.spec]
+    frac = {}
+    for tag, eng, rep in (("1dev", ref_eng, ref),
+                          ("mesh", mesh_eng, got)):
+        score = trace_bridge.score_serve(
+            trace_bridge.collect_serve(eng), spec, sa_cfg=sa_cfg,
+            report=rep)
+        agg = score["aggregate"]
+        frac[tag] = (agg["live_hit_fraction"],
+                     agg.get("bound_fraction", 0.0))
+    d_hit = abs(frac["1dev"][0] - frac["mesh"][0])
+    d_bound = abs(frac["1dev"][1] - frac["mesh"][1])
+    if d_hit > 0.02 or d_bound > 0.05:
+        print(f"PARITY FAIL: fractions drift hit={frac['1dev'][0]:.3f}"
+              f"/{frac['mesh'][0]:.3f} bound={frac['1dev'][1]:.3f}"
+              f"/{frac['mesh'][1]:.3f}")
+        ok = False
+    if ok:
+        print(f"MESH PARITY OK: {len(ref_out)} requests, tokens + "
+              f"statuses identical, hit {frac['mesh'][0]:.3f} "
+              f"(d={d_hit:.4f}), bound {frac['mesh'][1]:.3f} "
+              f"(d={d_bound:.4f}), 1 executable")
+    return ok
+
+
+def main(argv=None) -> int:
+    """CLI driver; returns a process exit status."""
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
     ap.add_argument("--policy", default="importance",
-                    choices=["static", "importance"])
+                    choices=list(policy_names()))
     ap.add_argument("--sparsity", type=float, default=0.0)
     ap.add_argument("--hbm-fraction", type=float, default=0.25)
     ap.add_argument("--spec", default="gh200", choices=list(SPECS))
@@ -32,42 +157,43 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--batch-slots", type=int, default=4)
-    args = ap.parse_args()
+    ap.add_argument("--stride", type=int, default=8,
+                    help="fused steps per chunk boundary")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="'data=N,model=M' — serve across a device "
+                         "mesh ('' = single device)")
+    ap.add_argument("--parity", action="store_true",
+                    help="run 1-device AND meshed (default "
+                         "data=2,model=2), check tokens/statuses/"
+                         "fractions match; exit 1 on divergence")
+    args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))
     model = Model(cfg)
     params = model.init(jax.random.key(0))
 
-    eng = ServingEngine(model, params, EngineConfig(
-        max_context=args.prompt_len + args.new_tokens + 32,
-        hbm_fraction=args.hbm_fraction, policy=args.policy,
-        attention_sparsity=args.sparsity, spec=SPECS[args.spec]))
+    if args.parity:
+        mesh = parse_mesh(args.mesh or "data=2,model=2")
+        return 0 if check_parity(model, params, args, mesh) else 1
 
-    cb = ContinuousBatcher(num_slots=args.batch_slots,
-                           total_pages=10_000)
-    for rid in range(args.requests):
-        cb.submit(Request(rid=rid, prompt_len=args.prompt_len,
-                          max_new_tokens=args.new_tokens))
-
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch_slots, args.prompt_len)),
-        jnp.int32)
-    eng.start(prompts)
-    tok = jnp.argmax(eng.step(prompts[:, -1]), -1).astype(jnp.int32)
-    steps = 1
-    while len(cb.completed) < args.requests and steps < 10_000:
-        cb.step()
-        tok = jnp.argmax(eng.step(tok), -1).astype(jnp.int32)
-        steps += 1
-
+    mesh = parse_mesh(args.mesh)
+    eng, report, wall = run_stream(model, params, args, mesh)
+    total = sum(len(r.output) for r in report)
     s = eng.summary()
-    print(f"served {args.requests} requests in {steps} engine steps")
-    print(f"modeled tokens/s: {s['modeled_tokens_per_s']:.0f}  "
-          f"hit rate: {s['mean_hbm_hit_rate']:.2f}  "
-          f"migrated: {s['migrated_bytes'] / 1e6:.1f} MB")
+    where = (f"mesh {dict(mesh.shape)}" if mesh is not None
+             else "1 device")
+    print(f"served {len(report)} requests / {total} tokens on {where} "
+          f"in {wall:.2f}s ({total / wall:.1f} tok/s wall)")
+    if report.ttft:
+        print(f"ttft p50 {report.ttft['p50'] * 1e3:.1f} ms  "
+              f"tpot p50 {report.tpot.get('p50', 0.0) * 1e3:.2f} ms")
+    print(f"modeled tokens/s {s.get('modeled_tokens_per_s', 0.0):.0f}  "
+          f"hbm hit rate {s.get('mean_hbm_hit_rate', 0.0):.2f}  "
+          f"serve executables {eng._serve_jit._cache_size()}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

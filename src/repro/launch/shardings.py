@@ -14,11 +14,19 @@ Modes:
           (`pod`, `data`);
   serve — TP over `model`, params replicated over `data`/`pod`, batch
           over `data` (and `pod` when multi-pod).
+
+The serve loop's mesh surface lives here too: `cache_shardings` (the
+two-tier paged pools), `policy_state_shardings` (per-lane policy state
+threaded through the serve scan), and `serve_shardings` (the bundle of
+per-lane / per-step specs `ServingEngine` pins on its fused serve
+chunk). All rules read only `mesh.axis_names` + `mesh.shape`, so they
+work with an `AbstractMesh` (and are unit-testable without devices —
+tests/test_shardings.py).
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -28,6 +36,12 @@ _MODEL_PRIORITY = ("experts", "heads", "kv_heads", "mlp", "vocab",
                    "head_dim", "embed")
 # priority for the data (FSDP) axis — train mode only
 _FSDP_PRIORITY = ("embed", "vocab", "mlp")
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    """{axis name: size} from any Mesh-like (`Mesh`, `AbstractMesh`,
+    or a test stub exposing `.shape` as a name->size mapping)."""
+    return dict(mesh.shape)
 
 
 def _pick_dim(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
@@ -42,7 +56,12 @@ def _pick_dim(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
 
 def param_pspec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
                 mesh: Mesh, mode: str = "train") -> P:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    """PartitionSpec for one parameter from its logical axis names.
+
+    The `model` axis claims the highest-priority divisible dim
+    (`_MODEL_PRIORITY`); in train mode `data` then claims an FSDP dim
+    from the remainder. Serve mode replicates over `data`/`pod`."""
+    sizes = _axis_sizes(mesh)
     spec = [None] * len(shape)
     taken: set = set()
     if "model" in sizes and sizes["model"] > 1:
@@ -72,27 +91,39 @@ def param_shardings(schema_axes: Any, abstract: Any, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def batch_axes(mesh: Mesh, batch: Optional[int] = None) -> Tuple[str, ...]:
-    """Batch mesh axes, dropped entirely when the batch is too small to
-    shard (e.g. long_500k's global_batch=1 replicates over data)."""
+    """Batch mesh axes: the WIDEST suffix of (`pod`, `data`) whose size
+    product divides `batch`.
+
+    Degrades axis by axis rather than all-or-nothing: a batch that
+    divides the `data` axis but not `pod`×`data` still shards over
+    `data` alone (replicating over `pod`) instead of replicating
+    everywhere; only a batch no axis divides (e.g. long_500k's
+    global_batch=1) drops to full replication. `batch=None` trusts the
+    caller and returns every batch axis."""
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    if batch is not None:
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if batch is None:
+        return axes
+    sizes = _axis_sizes(mesh)
+    for start in range(len(axes) + 1):
+        cand = axes[start:]
         total = 1
-        for a in axes:
+        for a in cand:
             total *= sizes[a]
-        if batch % total != 0 or batch < total:
-            return ()
-    return axes
+        if batch % total == 0 and batch >= total:
+            return cand
+    return ()
 
 
 def tokens_sharding(mesh: Mesh, batch: Optional[int] = None
                     ) -> NamedSharding:
+    """[B, S] token ids: batch-sharded rows, replicated positions."""
     return NamedSharding(mesh, P(batch_axes(mesh, batch), None))
 
 
 def logits_sharding(mesh: Mesh, vocab: int,
                     batch: Optional[int] = None) -> NamedSharding:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    """[B, V] logits: batch rows + vocab over `model` when divisible."""
+    sizes = _axis_sizes(mesh)
     v = "model" if vocab % sizes.get("model", 1) == 0 else None
     return NamedSharding(mesh, P(batch_axes(mesh, batch), v))
 
@@ -106,7 +137,7 @@ def _kv_shard_axis(geo, mesh: Mesh) -> str:
     chip busy even when kv_heads < model parallelism (llama4/qwen3-class
     GQA with kv=8 on a 16-way axis). Geometry pads pool sizes to 16.
     """
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = _axis_sizes(mesh)
     m = sizes.get("model", 1)
     if geo.kv_heads % m == 0:
         return "kv_heads"
@@ -137,9 +168,57 @@ def cache_shardings(geo, mesh: Mesh) -> Any:
         length=vec, importance=table)
 
 
+def policy_state_shardings(state: Any, geo, mesh: Mesh) -> Any:
+    """Shardings for a `DevicePolicy.init_state` pytree.
+
+    Policy state rides the serve scan next to the cache, so its lanes
+    must co-shard with the cache's lanes: leaves shaped like the page
+    table ([L, B, ...], e.g. recency's last-access stamps) take the
+    batch axes on dim 1, per-lane [B] vectors take them on dim 0, and
+    everything else (cost_aware's scalar payback bars, `()` for the
+    stateless policies) replicates. Leaves may be concrete arrays or
+    `ShapeDtypeStruct`s."""
+    b_ax = batch_axes(mesh, geo.batch)
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) >= 2 and shape[0] == geo.num_layers \
+                and shape[1] == geo.batch:
+            return NamedSharding(
+                mesh, P(None, b_ax, *([None] * (len(shape) - 2))))
+        if len(shape) == 1 and shape[0] == geo.batch:
+            return NamedSharding(mesh, P(b_ax))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, state)
+
+
+def serve_shardings(geo, mesh: Mesh) -> Dict[str, Any]:
+    """The sharding bundle `ServingEngine` pins on its fused serve
+    chunk (EXPERIMENTS.md §Mesh-sharding has the full rules table).
+
+      cache      PagedKVCache pytree (`cache_shardings`)
+      lane       per-lane [B] carries (token/active/remaining/...)
+      lane_kv    per-lane 2-D rows ([B, 2] PRNG keys, [B, S] prompts)
+      step_lane  per-(step, lane) [stride, B] fault masks + emissions
+      rep        replicated scalars/vectors (prefill credits, commit
+                 caps — the fault plane is global, not per-shard)
+
+    Lane axes come from `batch_axes(mesh, geo.batch)`, so a lane count
+    the data axis doesn't divide degrades to replication (values
+    unchanged, just no data-parallel speedup)."""
+    b_ax = batch_axes(mesh, geo.batch)
+    return {
+        "cache": cache_shardings(geo, mesh),
+        "lane": NamedSharding(mesh, P(b_ax)),
+        "lane_kv": NamedSharding(mesh, P(b_ax, None)),
+        "step_lane": NamedSharding(mesh, P(None, b_ax)),
+        "rep": NamedSharding(mesh, P()),
+    }
+
+
 def ssm_state_shardings(state: Any, mesh: Mesh) -> Any:
     """Recurrent states: batch over data; heads over model if divisible."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = _axis_sizes(mesh)
     m = sizes.get("model", 1)
 
     def one(leaf):
@@ -156,6 +235,7 @@ def ssm_state_shardings(state: Any, mesh: Mesh) -> Any:
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement (every device holds the whole array)."""
     return NamedSharding(mesh, P())
 
 

@@ -30,6 +30,7 @@ from repro.training.optimizer import AdamWState
 
 
 def main():
+    """CLI driver: short training run on the smoke or full config."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true",

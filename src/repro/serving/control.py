@@ -23,6 +23,13 @@ Semantics match the original host-side planner exactly:
     if strictly hotter, which reproduces the sequential early-break of
     the loop form (candidate importance is non-increasing in i while
     victim importance is non-decreasing).
+
+Under a device mesh (EXPERIMENTS.md §Mesh-sharding) nothing here
+changes: planning is elementwise over [L, B] pools that GSPMD shards
+lanes-over-`data` and heads/pages-over-`model`, plan tensors inherit
+the pool shardings, and the per-boundary commit caps
+(`MigrationFault` throttles) stay replicated scalars — so the control
+plane partitions along with the data plane with no extra collectives.
 """
 
 from __future__ import annotations

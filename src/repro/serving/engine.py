@@ -56,6 +56,13 @@ accesses + placements — lane 0 for the single-stream modes, every lane
 `repro.serving.trace_bridge` converts into simulator traces (stitched
 per request for serve streams) and scores against the paper's SA upper
 bound.
+
+Scaling out: `ServingEngine(model, params, cfg, mesh=...)` runs the
+identical serve loop across a jax device mesh — cache pools, migration
+plans, policy state, and the fault channel become mesh-sharded pytrees
+under the sharding rules in `repro.launch.shardings`, with one
+executable and zero retraces per (policy, mesh). See the `serve`
+docstring and EXPERIMENTS.md §Mesh-sharding.
 """
 
 from __future__ import annotations
@@ -270,7 +277,8 @@ class ServingEngine:
     access/placement stream is additionally kept for the simulator
     bridge (`repro.serving.trace_bridge`)."""
 
-    def __init__(self, model: Model, params, cfg: EngineConfig):
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 mesh=None):
         if cfg.policy not in policy_names():
             raise ValueError(
                 f"unknown EngineConfig.policy {cfg.policy!r}; registered "
@@ -279,9 +287,23 @@ class ServingEngine:
             raise ValueError(
                 f"EngineConfig.prefill_budget must be >= 1 tokens/step "
                 f"or None (uncapped), got {cfg.prefill_budget}")
+        if mesh is not None and "model" not in mesh.axis_names:
+            raise ValueError(
+                f"ServingEngine mesh needs a 'model' axis (and usually "
+                f"'data'); got axes {mesh.axis_names}")
         self.model = model
         self.params = params
         self.cfg = cfg
+        #: optional jax device mesh: `serve` then pins NamedShardings
+        #: on the fused chunk — KV pools tensor-parallel over kv_heads
+        #: or pages (`launch.shardings._kv_shard_axis`), lanes
+        #: data-parallel over `batch_axes` — and places params / cache
+        #: / policy state once per stream. None = single device, the
+        #: exact pre-mesh behavior. A constructor argument, not an
+        #: EngineConfig field: the compiled executables are keyed on
+        #: it (`_ensure_step_fns`), but a Mesh is device state, not a
+        #: serializable config value.
+        self.mesh = mesh
         self.stats: List[StepStats] = []
         self._sampling = SamplingConfig()
         #: raw (stats, access, tier) chunks when cfg.trace_telemetry
@@ -319,8 +341,10 @@ class ServingEngine:
         geometry, sampling config, or engine config changed, so repeated
         `serve`/`start` calls over the same shapes reuse the compiled
         executables (cfg is part of the key because the step closures
-        bake in policy/threshold/stride/eos)."""
-        key = (self.geo, self._sampling, dataclasses.astuple(self.cfg))
+        bake in policy/threshold/stride/eos; the mesh because the serve
+        jit pins its shardings)."""
+        key = (self.geo, self._sampling, dataclasses.astuple(self.cfg),
+               self.mesh)
         if getattr(self, "_fns_key", None) != key:
             self._build_step_fns()
             self._fns_key = key
@@ -588,11 +612,60 @@ class ServingEngine:
         self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1, 2))
         self._gen_jit = jax.jit(gen_fn, donate_argnums=(1, 2),
                                 static_argnums=(4,))
-        if serveable:
-            self._serve_jit = jax.jit(serve_chunk_fn,
-                                      donate_argnums=(1, 2))
+        #: mesh placements for serve-stream inputs (params / cache /
+        #: policy state), set when a mesh is attached (serve() applies
+        #: them with jax.device_put before the first chunk)
+        self._serve_place = None
+        if serveable and self.mesh is not None:
+            self._build_sharded_serve_jit(serve_chunk_fn)
+        else:
+            if serveable:
+                self._serve_jit = jax.jit(serve_chunk_fn,
+                                          donate_argnums=(1, 2))
+            self._release_jit = jax.jit(control.release_lanes,
+                                        donate_argnums=(0,))
+
+    def _build_sharded_serve_jit(self, serve_chunk_fn):
+        """Pin the fused serve chunk's shardings on `self.mesh`.
+
+        Explicit `in_shardings`/`out_shardings` rather than trusting
+        GSPMD's defaults, for three reasons: (1) the donated carries
+        (cache, policy state) must come back in EXACTLY the sharding
+        they went in, or chunk-to-chunk re-layout would defeat donation
+        and could oscillate into retraces — pinning out == in makes the
+        sharding a fixed point; (2) host-built chunk inputs (tokens,
+        masks, the prompt buffer) are uncommitted numpy uploads, so the
+        in_shardings place them lane-sharded for free; (3) the rules
+        themselves are the documented surface (EXPERIMENTS.md
+        §Mesh-sharding) — KV pools over kv_heads or pages, lanes over
+        `data`, fault caps replicated. Stats outputs stay unpinned
+        (`None`): they are read back to host each boundary either way.
+        """
+        from repro.launch import shardings as shd
+        mesh, model, geo = self.mesh, self.model, self.geo
+        sh = shd.serve_shardings(geo, mesh)
+        pshard = shd.param_shardings(model.logical_axes(),
+                                     model.abstract_params(), mesh,
+                                     "serve")
+        pstate_abs = jax.eval_shape(
+            lambda: self._policy.init_state(geo))
+        psh = shd.policy_state_shardings(pstate_abs, geo, mesh)
+        lane, lane_kv = sh["lane"], sh["lane_kv"]
+        rep, step_lane = sh["rep"], sh["step_lane"]
+        cache_sh = sh["cache"]
+        in_sh = (pshard, cache_sh, psh, lane, lane, lane, lane_kv,
+                 lane, lane, lane_kv, rep, rep, step_lane)
+        out_sh = (cache_sh, psh, lane, lane, lane, lane_kv, lane, rep,
+                  step_lane, step_lane, step_lane, None)
+        self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=(1, 2),
+                                  in_shardings=in_sh,
+                                  out_shardings=out_sh)
         self._release_jit = jax.jit(control.release_lanes,
-                                    donate_argnums=(0,))
+                                    donate_argnums=(0,),
+                                    in_shardings=(cache_sh, lane),
+                                    out_shardings=cache_sh)
+        self._serve_place = {"params": pshard, "cache": cache_sh,
+                             "pstate": psh, "rep": rep}
 
     # ------------------------------------------------------------------ #
     # drive modes
@@ -704,6 +777,18 @@ class ServingEngine:
         quarantined on device and completed as "failed". Every request
         ends in exactly one terminal status (`ServeReport.statuses`).
 
+        Constructed with a device mesh (`ServingEngine(..., mesh=m)`),
+        the SAME loop runs sharded: the chunk executable is compiled
+        with pinned `NamedSharding`s (KV pools tensor-parallel over
+        kv_heads or pages, lanes data-parallel, fault caps replicated
+        — `repro.launch.shardings.serve_shardings`), the cache /
+        policy-state carries stay device-resident and donated per
+        shard, and boundary readbacks gather transparently. Placement
+        is values-only, so the zero-retrace and one-executable pins
+        hold per mesh, and tokens + terminal statuses match the
+        single-device stream (tests/test_mesh_serve.py; EXPERIMENTS.md
+        §Mesh-sharding).
+
         `faults` optionally injects a deterministic adversity schedule
         (`FaultPlane`): tier-bandwidth degradation reprices telemetry
         under the degraded spec and recalibrates cost_aware paybacks;
@@ -736,7 +821,24 @@ class ServingEngine:
         self._sampling = sampling or SamplingConfig()
         self._ensure_step_fns()
         pstate = self._policy.init_state(geo)
+        if self._serve_place is not None:
+            # mesh placement, once per stream: shard the fresh cache +
+            # policy state (the donated carries) and the params to the
+            # exact shardings the serve jit pins — every later chunk
+            # then reuses the placement (device_put on an
+            # already-matching pytree is a no-op)
+            self.state = jax.device_put(self.state,
+                                        self._serve_place["cache"])
+            pstate = jax.device_put(pstate, self._serve_place["pstate"])
+            self.params = jax.device_put(self.params,
+                                         self._serve_place["params"])
         credits = jnp.zeros((), jnp.int32)   # prefill token bucket
+        if self._serve_place is not None:
+            # committed-replicated from chunk one, like every later
+            # chunk's device output — an uncommitted first value would
+            # fork the jit's input-sharding cache key (2 entries, same
+            # lowering) and break the one-executable pin
+            credits = jax.device_put(credits, self._serve_place["rep"])
         #: per-chunk (access, tier, emitted, first, rids, prompt_len)
         #: when cfg.trace_telemetry (trace_bridge.collect_serve)
         self._serve_trace_log = []
@@ -828,6 +930,13 @@ class ServingEngine:
             spec_now = faults.spec_at(step0, base_spec)
             if spec_now != last_spec:
                 pstate = self._policy.recalibrate(pstate, spec_now)
+                if self._serve_place is not None:
+                    # recalibrated values are fresh host scalars —
+                    # restore the pinned placement so the chunk jit's
+                    # input-sharding key (and the one-executable pin)
+                    # survives the boundary
+                    pstate = jax.device_put(pstate,
+                                            self._serve_place["pstate"])
                 last_spec = spec_now
                 events.append({
                     "kind": "payback_recalibration", "step": step0,

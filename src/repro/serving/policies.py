@@ -18,7 +18,12 @@ Protocol (duck-typed, no registration of the engine required):
                                 serve `lax.scan` (empty tuple for
                                 stateless policies). Values may change
                                 every step; shapes may not (zero
-                                retraces across the stream).
+                                retraces across the stream). Under a
+                                mesh the engine shards state leaves by
+                                shape (`launch.shardings.policy_state_
+                                shardings`): [L, B, ...] and [B] leaves
+                                follow the lanes over `data`, scalars
+                                (cost_aware's payback bars) replicate.
   plan(cache, state, active, budget, read_mask=None)
       -> (MigrationPlan, state, (n_promotes, n_demotes))
                                 one planning step. The plan's capacity

@@ -43,6 +43,14 @@ summed per step before the Eq. (2) max, exactly how per-layer traffic
 already aggregates) and each request in isolation against SA / Belady
 / static under the live per-layer HBM budget. See
 EXPERIMENTS.md §Serve-trace.
+
+Telemetry read back from a meshed engine (EXPERIMENTS.md
+§Mesh-sharding) arrives here as plain host numpy exactly as in the
+single-device case — stats outputs are unsharded at the chunk
+boundary — so the bridge needs no mesh awareness. Scores may differ
+from a single-device run only within the parity tolerances (mesh
+float reassociation can flip individual migration choices); the
+parity suite pins hit/bound fractions to 0.02/0.05.
 """
 
 from __future__ import annotations
