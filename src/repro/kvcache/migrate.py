@@ -7,10 +7,24 @@ static shapes: both directions take fixed-size index arrays padded with
 the scatter (`mode="drop"`) — NOT masked via gather+select, which would
 both read stale values and collide on duplicate clamped indices.
 
-On a real TPU the two pools live in different `memory_kind`s and XLA
-lowers the cross-pool scatter into DMA transfers over the host link —
-the M_i / M_o traffic of Eq. (3)/(4). The byte accounting used by the
-simulator and by the engine's telemetry matches 1:1.
+Execution is an explicit TWO-PHASE commit (PR 8, the async-migration
+split): `stage_plan` gathers every source page from the input pools
+into a staging buffer, and `commit_staged` scatters the buffer into the
+destination pools and rewrites the maps. `apply_migrations` — the
+inline path every pre-overlap call site uses — is exactly
+stage-then-commit with zero lag, so the split is bitwise-invisible to
+it (pinned by tests/test_async_migration.py). The overlap serve
+pipeline (`EngineConfig.overlap_migrations`) threads a staged
+`MigrationPlan` through the scan carry instead and commits it one step
+later, concurrently with the next step's decode compute; hazard masking
+for that lag lives in `repro.serving.control.revalidate_plan`.
+
+On a real TPU the two pools live in different `memory_kind`s
+(`repro.kvcache.paged.host_memory_kind` feature-detects pinned host
+memory) and XLA lowers the cross-pool scatter into DMA transfers over
+the host link — the M_i / M_o traffic of Eq. (3)/(4). The byte
+accounting used by the simulator and by the engine's telemetry matches
+1:1.
 """
 
 from __future__ import annotations
@@ -46,8 +60,11 @@ class MigrationPlan:
 
     @classmethod
     def empty(cls, capacity: int) -> "MigrationPlan":
-        z = jnp.full((capacity,), -1, jnp.int32)
-        return cls(*([z] * 10))
+        # ten DISTINCT buffers, not one aliased array: the overlap
+        # serve loop donates the empty plan as the initial scan carry,
+        # and XLA rejects donating the same buffer twice
+        return cls(*[jnp.full((capacity,), -1, jnp.int32)
+                     for _ in range(10)])
 
     @classmethod
     def build(cls, capacity: int, promotes, demotes) -> "MigrationPlan":
@@ -86,17 +103,51 @@ def _oob(idx, ok, bound):
     return jnp.where(ok, idx, jnp.int32(bound))
 
 
-def apply_migrations(cache: PagedKVCache,
-                     plan: MigrationPlan) -> PagedKVCache:
-    """Execute a migration batch. Shapes are static in `plan`.
+def stage_plan(cache: PagedKVCache, plan: MigrationPlan
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Phase 1 of the two-phase commit: gather every source page.
 
-    All source pages are gathered from the INPUT pools before any
-    scatter runs, so a swap — a demotion whose destination is the host
-    slot being vacated by a promotion (``dem_dst == pro_src``) — reads
-    the promoted page before the victim overwrites its slot. Owner
-    clears likewise land before owner sets, so the swapped slots end up
-    owned by the arriving page, not marked free.
+    Returns `(dem_k, dem_v, pro_k, pro_v)`, each [M, T, KH, HD] — the
+    HBM pages the plan demotes and the host pages it promotes, read
+    from the INPUT pools before any scatter runs. Staging first is what
+    makes a swap safe: a demotion whose destination is the host slot
+    being vacated by a promotion (``dem_dst == pro_src``) reads the
+    promoted page before the victim overwrites its slot — the
+    gather-before-scatter discipline the engine has relied on since the
+    first fused step. Sentinel (-1) rows gather an arbitrary in-bounds
+    page; `commit_staged` routes them out of bounds and drops them.
     """
+    L = cache.k_hbm.shape[0]
+    hbm_pages = cache.k_hbm.shape[2]
+    host_pages = cache.k_host.shape[2]
+    d_l = jnp.clip(plan.dem_layer, 0, L - 1)
+    d_b = jnp.maximum(plan.dem_batch, 0)
+    d_src = jnp.clip(plan.dem_src, 0, hbm_pages - 1)
+    dem_k = cache.k_hbm[d_l, d_b, d_src]          # [M, T, KH, HD]
+    dem_v = cache.v_hbm[d_l, d_b, d_src]
+    p_l = jnp.clip(plan.pro_layer, 0, L - 1)
+    p_b = jnp.maximum(plan.pro_batch, 0)
+    p_src = jnp.clip(plan.pro_src, 0, host_pages - 1)
+    pro_k = cache.k_host[p_l, p_b, p_src]
+    pro_v = cache.v_host[p_l, p_b, p_src]
+    return dem_k, dem_v, pro_k, pro_v
+
+
+def commit_staged(cache: PagedKVCache, plan: MigrationPlan,
+                  staged: Tuple[jax.Array, jax.Array, jax.Array, jax.Array]
+                  ) -> PagedKVCache:
+    """Phase 2 of the two-phase commit: scatter the staged pages and
+    rewrite the maps. Shapes are static in `plan`.
+
+    `staged` is `stage_plan`'s gather of the SAME plan. Sentinel rows
+    scatter to out-of-bounds indices (`mode="drop"`). Owner clears land
+    before owner sets, so swapped slots end up owned by the arriving
+    page, not marked free. The caller owns hazard ordering: when the
+    commit lags the plan (overlap mode), it must first mask rows the
+    interim steps invalidated (`control.revalidate_plan`) and re-stage
+    against the commit-time pools.
+    """
+    dem_k, dem_v, pro_k, pro_v = staged
     k_hbm, v_hbm = cache.k_hbm, cache.v_hbm
     k_host, v_host = cache.k_host, cache.v_host
     page_table = cache.page_table
@@ -120,14 +171,6 @@ def apply_migrations(cache: PagedKVCache,
     p_src = jnp.minimum(jnp.maximum(plan.pro_src, 0), host_pages - 1)
     p_dst = _oob(plan.pro_dst, p_ok, hbm_pages)
     p_logical = _oob(plan.pro_logical, p_ok, max_pages)
-
-    # ---- gather every source page from the input pools ---------------------
-    d_lr = jnp.minimum(d_l, L - 1)
-    dem_k = k_hbm[d_lr, d_b, d_src]               # [M, T, KH, HD]
-    dem_v = v_hbm[d_lr, d_b, d_src]
-    p_lr = jnp.minimum(p_l, L - 1)
-    pro_k = k_host[p_lr, p_b, p_src]
-    pro_v = v_host[p_lr, p_b, p_src]
 
     # ---- scatter data ------------------------------------------------------
     k_host = k_host.at[d_l, d_b, d_dst].set(dem_k, mode="drop")
@@ -153,6 +196,18 @@ def apply_migrations(cache: PagedKVCache,
     return dataclasses.replace(
         cache, k_hbm=k_hbm, v_hbm=v_hbm, k_host=k_host, v_host=v_host,
         page_table=page_table, hbm_owner=hbm_owner, host_owner=host_owner)
+
+
+def apply_migrations(cache: PagedKVCache,
+                     plan: MigrationPlan) -> PagedKVCache:
+    """Execute a migration batch inline: two-phase commit with zero lag.
+
+    Exactly `commit_staged(cache, plan, stage_plan(cache, plan))` — the
+    pre-overlap call sites (the inline serve step, `step`/`run`/
+    `generate`) keep this entry point, and the two-phase split is
+    bitwise-invisible to them (tests/test_async_migration.py).
+    """
+    return commit_staged(cache, plan, stage_plan(cache, plan))
 
 
 def migration_bytes(plan: MigrationPlan, page_bytes: int

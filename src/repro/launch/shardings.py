@@ -202,17 +202,24 @@ def serve_shardings(geo, mesh: Mesh) -> Dict[str, Any]:
       step_lane  per-(step, lane) [stride, B] fault masks + emissions
       rep        replicated scalars/vectors (prefill credits, commit
                  caps — the fault plane is global, not per-shard)
+      plan       the staged MigrationPlan carry (overlap mode): ten
+                 small [M] int32 rows, replicated — every shard must
+                 see the whole plan because revalidation reads owner
+                 maps that may live on other shards' page ranges
 
     Lane axes come from `batch_axes(mesh, geo.batch)`, so a lane count
     the data axis doesn't divide degrades to replication (values
     unchanged, just no data-parallel speedup)."""
+    from repro.kvcache.migrate import MigrationPlan
     b_ax = batch_axes(mesh, geo.batch)
+    rep = NamedSharding(mesh, P())
     return {
         "cache": cache_shardings(geo, mesh),
         "lane": NamedSharding(mesh, P(b_ax)),
         "lane_kv": NamedSharding(mesh, P(b_ax, None)),
         "step_lane": NamedSharding(mesh, P(None, b_ax)),
-        "rep": NamedSharding(mesh, P()),
+        "rep": rep,
+        "plan": MigrationPlan(*([rep] * 10)),
     }
 
 

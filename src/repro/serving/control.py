@@ -24,6 +24,16 @@ Semantics match the original host-side planner exactly:
     the loop form (candidate importance is non-increasing in i while
     victim importance is non-decreasing).
 
+Overlap mode (EXPERIMENTS.md §Async-migration) threads a STAGED
+`MigrationPlan` through the serve scan carry: step N commits the plan
+step N-1 staged while planning for step N+1. The hazard masking that
+makes the one-step lag safe lives here — `revalidate_plan` re-checks
+every staged row against the commit-time owner maps (in-flight decode /
+prefill allocations invalidate rows instead of being clobbered), and
+`mask_plan_lanes` drops rows for lanes the host rebound at a chunk
+boundary (lane reuse can reproduce identical (slot, logical) pairs for
+a different request, which owner maps cannot distinguish).
+
 Under a device mesh (EXPERIMENTS.md §Mesh-sharding) nothing here
 changes: planning is elementwise over [L, B] pools that GSPMD shards
 lanes-over-`data` and heads/pages-over-`model`, plan tensors inherit
@@ -169,6 +179,90 @@ def plan_by_score(cache: PagedKVCache, host_score: jax.Array,
         *rows(demote, lidx, bidx, dst_slot, cand_slot, victim_logical),
     )
     return plan, promote.sum(), demote.sum()
+
+
+def _mask_plan_rows(plan: MigrationPlan, keep: jax.Array) -> MigrationPlan:
+    """Sentinel out every plan row where `keep` is False — BOTH halves
+    with the same [M] mask (`plan_by_score` pairs demote i with promote
+    i, and a demote row is live only when its promote is), so a masked
+    plan never orphans half a swap."""
+    def m(a):
+        return jnp.where(keep, a, jnp.int32(-1))
+
+    return MigrationPlan(
+        m(plan.pro_layer), m(plan.pro_batch), m(plan.pro_src),
+        m(plan.pro_dst), m(plan.pro_logical),
+        m(plan.dem_layer), m(plan.dem_batch), m(plan.dem_src),
+        m(plan.dem_dst), m(plan.dem_logical))
+
+
+def revalidate_plan(plan: MigrationPlan, cache: PagedKVCache
+                    ) -> MigrationPlan:
+    """Hazard-mask a STAGED plan against the commit-time owner maps.
+
+    In overlap mode (`EngineConfig.overlap_migrations`) a plan is built
+    at step N and commits at step N+1, so the steps in between — the
+    next decode's fresh-page allocation (`allocate_token_page`), the
+    prefill plane's page registration, a competing commit — may have
+    changed the placement the plan assumed. A promote row survives only
+    when the world still matches the plan:
+
+      * its source host slot still holds the planned logical page
+        (``host_owner[src] == logical`` — a release, re-admission, or
+        earlier promote of that page invalidates the row);
+      * its destination is still what the plan paired it with: the
+        planned victim for swap rows (``hbm_owner[dem_src] ==
+        dem_logical``), a still-free slot for fill rows
+        (``hbm_owner[dst] < 0`` — a decode/prefill allocation into the
+        slot in the interim kills the row rather than letting the
+        commit clobber a page the in-flight step just wrote).
+
+    Demote rows are masked with the SAME row mask (index-paired swaps,
+    as in `faults.throttle_plan`). This is values-only masking over the
+    fixed-capacity plan — jit-safe, zero retraces — and it makes the
+    staged commit idempotent against every in-flight mutation the scan
+    can produce; the one hazard owner maps cannot express (a released
+    lane re-bound to a DIFFERENT request with the same deterministic
+    static placement) is handled by `mask_plan_lanes` at chunk
+    boundaries.
+    """
+    ho, eo = cache.hbm_owner, cache.host_owner
+    Ph, Pe = ho.shape[2], eo.shape[2]
+
+    def gather(owner, l, b, s, bound):
+        return owner[jnp.clip(l, 0, owner.shape[0] - 1),
+                     jnp.maximum(b, 0),
+                     jnp.clip(s, 0, bound - 1)]
+
+    live = plan.pro_layer >= 0
+    src_owner = gather(eo, plan.pro_layer, plan.pro_batch,
+                       plan.pro_src, Pe)
+    src_ok = src_owner == plan.pro_logical
+    dst_owner = gather(ho, plan.pro_layer, plan.pro_batch,
+                       plan.pro_dst, Ph)
+    swap = plan.dem_layer >= 0
+    victim_owner = gather(ho, plan.dem_layer, plan.dem_batch,
+                          plan.dem_src, Ph)
+    dst_ok = jnp.where(swap, victim_owner == plan.dem_logical,
+                       dst_owner < 0)
+    return _mask_plan_rows(plan, live & src_ok & dst_ok)
+
+
+def mask_plan_lanes(plan: MigrationPlan, stale: jax.Array
+                    ) -> MigrationPlan:
+    """Drop every staged row targeting a `stale` lane (bool [B]).
+
+    The chunk-boundary half of overlap-mode hazard masking: a plan
+    staged in the previous chunk may reference a lane the host released
+    or (re)admitted at the boundary. `revalidate_plan` cannot catch the
+    reuse case — static placement is deterministic, so a re-admitted
+    request can reproduce the exact (slot, logical) pairs of the
+    evicted one with a DIFFERENT request's pages — so the engine masks
+    freshly (re)bound lanes out of the staged buffer explicitly before
+    the chunk runs (tests/test_serve_trace.py lane-reuse pin)."""
+    lane = jnp.maximum(plan.pro_batch, 0)
+    keep = (plan.pro_layer >= 0) & ~stale[lane]
+    return _mask_plan_rows(plan, keep)
 
 
 def slot_scores(values: jax.Array, owner: jax.Array) -> jax.Array:

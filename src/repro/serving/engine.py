@@ -57,6 +57,16 @@ accesses + placements — lane 0 for the single-stream modes, every lane
 per request for serve streams) and scores against the paper's SA upper
 bound.
 
+`EngineConfig.overlap_migrations` pipelines the migration plane inside
+the serve scan: step N commits the (revalidated, fault-throttled) plan
+staged at step N-1 concurrently with decode compute, and plans for
+step N+1 off this step's read set — a double-buffered plan/commit
+split with one-step-ahead KV prefetch (EXPERIMENTS.md
+§Async-migration). Decode semantics are placement-invariant, so the
+pipeline changes WHEN pages move, never what attention computes;
+`EngineConfig.measured_payback` additionally recalibrates cost_aware's
+payback bars from a measured migration microbenchmark.
+
 Scaling out: `ServingEngine(model, params, cfg, mesh=...)` runs the
 identical serve loop across a jax device mesh — cache pools, migration
 plans, policy state, and the fault channel become mesh-sharded pytrees
@@ -77,8 +87,10 @@ import numpy as np
 
 from repro.core.latency_model import StepTraffic, step_latency
 from repro.core.tiers import MemorySystemSpec, TPU_V5E
-from repro.kvcache.migrate import apply_migrations
-from repro.kvcache.paged import PagedKVCache, abstract_cache, init_cache
+from repro.kvcache.migrate import MigrationPlan, apply_migrations
+from repro.kvcache.paged import (
+    PagedKVCache, abstract_cache, host_memory_kind, init_cache,
+)
 from repro.models.model import Model
 from repro.serving import control
 from repro.serving.faults import FaultPlane, NO_FAULT_CAP, throttle_plan
@@ -155,6 +167,32 @@ class EngineConfig:
     #: base ratios share one knob) — with the host tier that slow,
     #: migrating pages toward it can no longer pay back.
     fallback_tier_ratio: float = 8.0
+    #: async-migration pipeline (EXPERIMENTS.md §Async-migration): the
+    #: serve scan carries a STAGED MigrationPlan — step N commits the
+    #: plan staged at step N-1 (revalidated against the commit-time
+    #: owner maps, then throttled by the fault channel) concurrently
+    #: with its decode compute, and plans for step N+1 off this step's
+    #: read set (the one-step-ahead re-reference oracle; every policy
+    #: grows `plan_ahead` eviction protection, active under sparse
+    #: attention). False keeps the serial plan-then-commit step — the
+    #: bitwise inline baseline. Decode semantics are
+    #: placement-invariant (attention reads pages wherever they live),
+    #: so the pipeline shifts placement timing — hit fractions,
+    #: modeled latency, and at most the floating-point association of
+    #: the per-tier LSE merge when interim placements differ.
+    #: Serve-path only: step/run/generate always run inline.
+    overlap_migrations: bool = False
+    #: calibrate cost_aware's payback thresholds from MEASURED per-page
+    #: migration latency instead of the modeled spec: a one-shot
+    #: microbenchmark at serve start times the jitted commit
+    #: (full-capacity plan vs empty plan) and inverts Eq. (3)'s move
+    #: cost into an effective link bandwidth. Telemetry PRICING stays
+    #: on `spec` (the model is the model); only the policy's
+    #: promote/demote bars move, and tier-fault degradations compose
+    #: onto the measured spec for recalibration. Stamps a
+    #: "payback_measured" event; falls back to the modeled spec when
+    #: the measurement can't resolve the link term.
+    measured_payback: bool = False
 
 
 @dataclasses.dataclass
@@ -304,6 +342,13 @@ class ServingEngine:
         #: it (`_ensure_step_fns`), but a Mesh is device state, not a
         #: serializable config value.
         self.mesh = mesh
+        #: feature-detected pinned host memory kind ("pinned_host" on
+        #: real TPU/GPU runtimes, None on CPU) — probed ONCE at
+        #: construction; overlap-mode serve places its host pools there
+        #: (single-device streams only: a mesh pins its own shardings)
+        #: so the staged commit's cross-pool scatter is a true host-link
+        #: DMA the decode compute hides.
+        self._host_memory_kind = host_memory_kind()
         self.stats: List[StepStats] = []
         self._sampling = SamplingConfig()
         #: raw (stats, access, tier) chunks when cfg.trace_telemetry
@@ -351,6 +396,7 @@ class ServingEngine:
 
     def _build_step_fns(self):
         cfg, model, geo = self.cfg, self.model, self.geo
+        overlap = cfg.overlap_migrations
         sparsity = cfg.attention_sparsity
         fam = model.cfg.family
         has_cache = fam in ("dense", "vlm", "moe", "encdec") or (
@@ -435,6 +481,58 @@ class ServingEngine:
                 body, (state, pstate, token), None, length=n)
             return state, pstate, token, toks, stats
 
+        def step_overlap_fn(params, state, pstate, staged, token, active,
+                            mig_cap):
+            """Overlap-mode serve step: the double-buffered plan/commit
+            split. Three stages, all in one traced program:
+
+              1. decode against the PRE-commit placement (the commit
+                 lands "concurrently" with this compute — on real
+                 hardware the staged cross-pool scatter is an async DMA
+                 the forward hides; in the traced program it is
+                 sequenced after the decode so the step's reads see the
+                 old placement, the bitwise expression of overlap);
+              2. COMMIT the plan staged one step ago: hazard-revalidated
+                 against the commit-time owner maps
+                 (`control.revalidate_plan` — a page never commits into
+                 a slot the in-flight step just allocated) and throttled
+                 by the fault channel (the chaos caps govern what
+                 COMMITS, exactly as inline — telemetry counts committed
+                 moves);
+              3. PLAN for the step after next on the post-commit
+                 placement, with this step's read set as the
+                 one-step-ahead re-reference oracle (`plan_ahead`
+                 policies protect it from eviction). The fresh plan is
+                 the new staged carry.
+            """
+            cache = _get_cache(state)
+            kwargs = {"write_slot": control.choose_write_slot(cache)}
+            mask = None
+            if masked:
+                mask = control.quest_page_mask(cache, sparsity)
+                kwargs["logical_page_mask"] = mask
+            read = mask if mask is not None else cache.page_table >= 0
+            logits, state = model.decode_step(params, state, token,
+                                              **kwargs)
+            state = _set_cache(state, control.lane_merge(
+                cache, _get_cache(state), active))
+            cache = _get_cache(state)
+            # occupancy + read-time placement are PRE-commit: this
+            # step's attention read the old placement
+            occ = control.occupancy(cache)
+            tiers = control.page_tiers(cache) if capture else None
+            commit = control.revalidate_plan(staged, cache)
+            commit = throttle_plan(commit, mig_cap)
+            n_pro, n_dem = commit.row_counts()
+            cache = apply_migrations(cache, commit)
+            state = _set_cache(state, cache)
+            staged, pstate, _ = policy.plan(cache, pstate, active,
+                                            budget, read_mask=read)
+            moves = jnp.stack([n_pro, n_dem]).astype(jnp.int32)
+            base = jnp.concatenate([occ, moves])
+            stats = (base, read, tiers) if capture else (base,)
+            return logits, state, pstate, staged, stats
+
         serveable = fam in ("dense", "moe")
         if serveable:
             C = max(1, cfg.prefill_chunk)
@@ -450,9 +548,9 @@ class ServingEngine:
                 jax.ShapeDtypeStruct((B,), jnp.int32),
                 jax.ShapeDtypeStruct((B,), jnp.int32))
 
-        def serve_chunk_fn(params, state, pstate, token, active, remaining,
-                           keys, prefilled, prompt_len, prompt_buf,
-                           credits, mig_caps, poison):
+        def _serve_chunk_impl(params, state, pstate, staged, token, active,
+                              remaining, keys, prefilled, prompt_len,
+                              prompt_buf, credits, mig_caps, poison):
             """One fused chunk of MIXED prefill+decode steps.
 
             Carries per-slot (token, active, remaining budget, PRNG key,
@@ -480,9 +578,20 @@ class ServingEngine:
             inactive, and is flagged in the `failed` output so the host
             completes it with status "failed" — every other lane's
             tokens are bitwise what they are in a clean run.
+
+            Overlap mode threads one more carry leaf: the STAGED
+            `MigrationPlan` — step N's decode plane commits the plan
+            staged at N-1 and stages a fresh one (`step_overlap_fn`);
+            pure-prefill steps pass it through untouched (the next
+            decode's revalidation catches any prefill-allocated slot
+            it names).
             """
             def body(carry, xs):
-                st, ps, tok, act, rem, ks, prog, cred = carry
+                if overlap:
+                    st, ps, stg, tok, act, rem, ks, prog, cred = carry
+                else:
+                    st, ps, tok, act, rem, ks, prog, cred = carry
+                    stg = None
                 cap, poi = xs
                 pf, dec = control.lane_modes(act, prog, prompt_len)
 
@@ -493,6 +602,9 @@ class ServingEngine:
                 # filtered at the boundary, so skipping it only saves
                 # the dead forward
                 def run_dec(args):
+                    if overlap:
+                        return step_overlap_fn(params, args[0], args[1],
+                                               args[2], args[3], dec, cap)
                     return step_fn(params, args[0], args[1], args[2], dec,
                                    mig_cap=cap)
 
@@ -511,11 +623,19 @@ class ServingEngine:
                                    control.page_tiers(c))
                     else:
                         nostats = (base,)
-                    return (jnp.zeros((B, vocab), pf_logits_sds.dtype),
-                            args[0], args[1], nostats)
+                    zeros = jnp.zeros((B, vocab), pf_logits_sds.dtype)
+                    if overlap:
+                        # no decode, no commit: the staged plan waits
+                        return (zeros, args[0], args[1], args[2],
+                                nostats)
+                    return (zeros, args[0], args[1], nostats)
 
-                logits, st, ps, stats = jax.lax.cond(
-                    dec.any(), run_dec, skip_dec, (st, ps, tok))
+                if overlap:
+                    logits, st, ps, stg, stats = jax.lax.cond(
+                        dec.any(), run_dec, skip_dec, (st, ps, stg, tok))
+                else:
+                    logits, st, ps, stats = jax.lax.cond(
+                        dec.any(), run_dec, skip_dec, (st, ps, tok))
                 if capture:
                     # decode-plane attribution only: a lane's reads
                     # count while it DECODES — prefilling lanes' pages
@@ -596,17 +716,56 @@ class ServingEngine:
                 if eos is not None:
                     fin0 = fin0 | (crossed & (tok0 == eos))
                 act = act & ~fin0 & ~bad0
-                return (st, ps, tok, act, rem, ks, prog, cred), (
-                    emitted, first, bad | bad0, stats)
+                if overlap:
+                    out_carry = (st, ps, stg, tok, act, rem, ks, prog,
+                                 cred)
+                else:
+                    out_carry = (st, ps, tok, act, rem, ks, prog, cred)
+                return out_carry, (emitted, first, bad | bad0, stats)
 
-            carry = (state, pstate, token, active, remaining, keys,
-                     prefilled, credits)
+            if overlap:
+                carry = (state, pstate, staged, token, active, remaining,
+                         keys, prefilled, credits)
+            else:
+                carry = (state, pstate, token, active, remaining, keys,
+                         prefilled, credits)
             carry, (emitted, first, failed, stats) = jax.lax.scan(
                 body, carry, (mig_caps, poison))
+            if overlap:
+                (state, pstate, staged, token, active, remaining, keys,
+                 prefilled, credits) = carry
+                return (state, pstate, staged, token, active, remaining,
+                        keys, prefilled, credits, emitted, first, failed,
+                        stats)
             (state, pstate, token, active, remaining, keys, prefilled,
              credits) = carry
             return (state, pstate, token, active, remaining, keys,
                     prefilled, credits, emitted, first, failed, stats)
+
+        if overlap:
+            def serve_chunk_fn(params, state, pstate, staged, token,
+                               active, remaining, keys, prefilled,
+                               prompt_len, prompt_buf, credits, stale,
+                               mig_caps, poison):
+                # boundary hygiene (overlap only): lanes the host
+                # released or (re)bound since the plan was staged carry
+                # rows revalidation cannot catch — static placement is
+                # deterministic, so a re-admitted request can reproduce
+                # the evicted one's exact (slot, logical) pairs. Mask
+                # them out before the chunk runs.
+                staged = control.mask_plan_lanes(staged, stale)
+                return _serve_chunk_impl(
+                    params, state, pstate, staged, token, active,
+                    remaining, keys, prefilled, prompt_len, prompt_buf,
+                    credits, mig_caps, poison)
+        else:
+            def serve_chunk_fn(params, state, pstate, token, active,
+                               remaining, keys, prefilled, prompt_len,
+                               prompt_buf, credits, mig_caps, poison):
+                return _serve_chunk_impl(
+                    params, state, pstate, None, token, active,
+                    remaining, keys, prefilled, prompt_len, prompt_buf,
+                    credits, mig_caps, poison)
 
         self._step_jit = jax.jit(step_fn, donate_argnums=(1, 2))
         self._chunk_jit = jax.jit(chunk_fn, donate_argnums=(1, 2))
@@ -620,8 +779,11 @@ class ServingEngine:
             self._build_sharded_serve_jit(serve_chunk_fn)
         else:
             if serveable:
+                # overlap additionally donates the staged-plan carry
+                # (small, but donation keeps the carry a fixed point)
+                donate = (1, 2, 3) if overlap else (1, 2)
                 self._serve_jit = jax.jit(serve_chunk_fn,
-                                          donate_argnums=(1, 2))
+                                          donate_argnums=donate)
             self._release_jit = jax.jit(control.release_lanes,
                                         donate_argnums=(0,))
 
@@ -653,11 +815,26 @@ class ServingEngine:
         lane, lane_kv = sh["lane"], sh["lane_kv"]
         rep, step_lane = sh["rep"], sh["step_lane"]
         cache_sh = sh["cache"]
-        in_sh = (pshard, cache_sh, psh, lane, lane, lane, lane_kv,
-                 lane, lane, lane_kv, rep, rep, step_lane)
-        out_sh = (cache_sh, psh, lane, lane, lane, lane_kv, lane, rep,
-                  step_lane, step_lane, step_lane, None)
-        self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=(1, 2),
+        if self.cfg.overlap_migrations:
+            # the staged-plan carry is a new donated leaf: replicated
+            # ([M] row vectors — the fault plane's convention: plans
+            # are global control state, not per-shard), out == in so
+            # the carry sharding is a fixed point; `stale` is a
+            # per-lane boundary input
+            plan_sh = sh["plan"]
+            in_sh = (pshard, cache_sh, psh, plan_sh, lane, lane, lane,
+                     lane_kv, lane, lane, lane_kv, rep, lane, rep,
+                     step_lane)
+            out_sh = (cache_sh, psh, plan_sh, lane, lane, lane, lane_kv,
+                      lane, rep, step_lane, step_lane, step_lane, None)
+            donate = (1, 2, 3)
+        else:
+            in_sh = (pshard, cache_sh, psh, lane, lane, lane, lane_kv,
+                     lane, lane, lane_kv, rep, rep, step_lane)
+            out_sh = (cache_sh, psh, lane, lane, lane, lane_kv, lane,
+                      rep, step_lane, step_lane, step_lane, None)
+            donate = (1, 2)
+        self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=donate,
                                   in_shardings=in_sh,
                                   out_shardings=out_sh)
         self._release_jit = jax.jit(control.release_lanes,
@@ -665,7 +842,8 @@ class ServingEngine:
                                     in_shardings=(cache_sh, lane),
                                     out_shardings=cache_sh)
         self._serve_place = {"params": pshard, "cache": cache_sh,
-                             "pstate": psh, "rep": rep}
+                             "pstate": psh, "rep": rep,
+                             "plan": sh["plan"]}
 
     # ------------------------------------------------------------------ #
     # drive modes
@@ -777,6 +955,22 @@ class ServingEngine:
         quarantined on device and completed as "failed". Every request
         ends in exactly one terminal status (`ServeReport.statuses`).
 
+        With `EngineConfig.overlap_migrations` the migration plane runs
+        as a two-phase, double-buffered pipeline inside the same scan:
+        each step COMMITS the plan staged at the previous step
+        (revalidated against the current owner maps and throttled by
+        the fault channel) concurrently with its decode compute, then
+        PLANS for the next step using this step's read set as a
+        one-step-ahead re-reference oracle (`DevicePolicy.plan_ahead`,
+        active when the read set is sparse). Decode SEMANTICS are
+        placement-invariant — attention reads the same pages wherever
+        they reside — so overlap mode computes the same stream; when
+        interim placements differ from the inline engine's, the
+        per-tier LSE merge may associate floating point differently
+        (the serve==generate bitwise pin is inline-mode). The
+        zero-retrace / one-executable pins hold per (policy, mesh,
+        overlap). See EXPERIMENTS.md §Async-migration.
+
         Constructed with a device mesh (`ServingEngine(..., mesh=m)`),
         the SAME loop runs sharded: the chunk executable is compiled
         with pinned `NamedSharding`s (KV pools tensor-parallel over
@@ -816,7 +1010,14 @@ class ServingEngine:
         geo = self.model.cache_geometry(
             B, cfg.max_context, hbm_fraction=cfg.hbm_fraction)
         self.geo = geo
-        self.state = init_cache(geo)
+        # overlap mode backs the host-tier pools with pinned_host
+        # memory when the platform exposes it (TPU/GPU) so the staged
+        # commit's gathers become true async DMA; single-device only —
+        # under a mesh the cache shardings own placement. On CPU
+        # `host_memory_kind()` is None and this is the plain init.
+        host_kind = self._host_memory_kind \
+            if (cfg.overlap_migrations and self.mesh is None) else None
+        self.state = init_cache(geo, host_kind=host_kind)
         self.stats = []
         self._sampling = sampling or SamplingConfig()
         self._ensure_step_fns()
@@ -874,9 +1075,38 @@ class ServingEngine:
         base_spec = cfg.spec
         cap_rows = control.plan_capacity(geo, cfg.migration_budget_frac)
         events: List[dict] = []
-        last_spec = base_spec
+        # measured-payback recalibration (cfg.measured_payback): replace
+        # the spec's MODELED link bandwidth with one derived from a
+        # one-shot microbenchmark of the actual jitted migration commit
+        # on this host, and re-derive cost_aware's payback bars from it.
+        # Pricing (StepStats -> Eq.(1)-(5)) stays on the modeled
+        # base_spec — the paper's accounting is the comparable surface;
+        # only the policy's decision thresholds go empirical. Tier
+        # faults compose onto whichever spec governs each consumer.
+        calib_base = base_spec
+        if cfg.measured_payback:
+            measured, detail = self._measure_migration_spec(geo)
+            if measured is not None:
+                calib_base = measured
+                pstate = self._policy.recalibrate(pstate, measured)
+                if self._serve_place is not None:
+                    pstate = jax.device_put(pstate,
+                                            self._serve_place["pstate"])
+            events.append({"kind": "payback_measured", "step": 0,
+                           **detail})
+        last_thresh = calib_base
         fallback = False
         drop_streak = 0
+        # overlap mode: the staged-plan scan carry starts as an all
+        # sentinel (empty) plan — step 0 commits nothing, exactly the
+        # one-step pipeline fill; `stale_np` marks lanes the host
+        # rebound between chunks so their staged rows get masked
+        staged = None
+        stale_np = np.zeros((B,), bool)
+        if cfg.overlap_migrations:
+            staged = MigrationPlan.empty(cap_rows)
+            if self._serve_place is not None:
+                staged = jax.device_put(staged, self._serve_place["plan"])
 
         stride = max(1, cfg.telemetry_stride)
         root = jax.random.PRNGKey(seed)
@@ -903,6 +1133,15 @@ class ServingEngine:
                     self._admit_lane(req, hs)
                     if req.lane >= 0:
                         live[req.lane] = req
+                        # overlap: a freshly (re)bound lane's staged
+                        # rows describe the PREVIOUS tenant — and
+                        # deterministic static placement means a
+                        # re-admission can reproduce the evicted
+                        # request's exact (slot, logical) pairs, so
+                        # commit-time revalidation alone cannot tell
+                        # them apart. Mark the lane stale; the chunk
+                        # masks its rows before anything commits.
+                        stale_np[req.lane] = True
 
         admit()
         view = batcher.device_view()
@@ -928,8 +1167,13 @@ class ServingEngine:
             # governs this chunk; past the ratio threshold, migrating
             # toward the host tier can't pay back — fall back to static
             spec_now = faults.spec_at(step0, base_spec)
-            if spec_now != last_spec:
-                pstate = self._policy.recalibrate(pstate, spec_now)
+            # thresholds recalibrate from `calib_base` (== base_spec
+            # unless measured_payback substituted a measured link) with
+            # the same tier-fault scales composed on top; PRICING stays
+            # on spec_now so telemetry remains paper-comparable
+            thresh_now = faults.spec_at(step0, calib_base)
+            if thresh_now != last_thresh:
+                pstate = self._policy.recalibrate(pstate, thresh_now)
                 if self._serve_place is not None:
                     # recalibrated values are fresh host scalars —
                     # restore the pinned placement so the chunk jit's
@@ -937,10 +1181,10 @@ class ServingEngine:
                     # survives the boundary
                     pstate = jax.device_put(pstate,
                                             self._serve_place["pstate"])
-                last_spec = spec_now
+                last_thresh = thresh_now
                 events.append({
                     "kind": "payback_recalibration", "step": step0,
-                    "bw_ratio": spec_now.bw_ratio})
+                    "bw_ratio": thresh_now.bw_ratio})
             if not fallback and spec_now.bw_ratio >= \
                     cfg.fallback_tier_ratio * base_spec.bw_ratio:
                 fallback = True
@@ -968,14 +1212,32 @@ class ServingEngine:
                 caps_np = np.zeros_like(caps_np)
             poison_np = faults.poison_steps(step0, stride, view.rids)
             t0 = time.time()
-            (self.state, pstate, tok_d, act_d, _rem_d, keys_d, prog_d,
-             credits, emitted, first, failed, stats) = self._serve_jit(
-                self.params, self.state, pstate, jnp.asarray(hs["token"]),
-                jnp.asarray(view.active), jnp.asarray(view.remaining),
-                jnp.asarray(hs["keys"]), jnp.asarray(view.prefilled),
-                jnp.asarray(view.prompt_len),
-                jnp.asarray(hs["prompt_buf"]), credits,
-                jnp.asarray(caps_np), jnp.asarray(poison_np))
+            if cfg.overlap_migrations:
+                (self.state, pstate, staged, tok_d, act_d, _rem_d,
+                 keys_d, prog_d, credits, emitted, first, failed,
+                 stats) = self._serve_jit(
+                    self.params, self.state, pstate, staged,
+                    jnp.asarray(hs["token"]), jnp.asarray(view.active),
+                    jnp.asarray(view.remaining), jnp.asarray(hs["keys"]),
+                    jnp.asarray(view.prefilled),
+                    jnp.asarray(view.prompt_len),
+                    jnp.asarray(hs["prompt_buf"]), credits,
+                    jnp.asarray(stale_np), jnp.asarray(caps_np),
+                    jnp.asarray(poison_np))
+                # the chunk consumed the staleness marks; releases /
+                # admissions below repopulate them for the next chunk
+                stale_np = np.zeros((B,), bool)
+            else:
+                (self.state, pstate, tok_d, act_d, _rem_d, keys_d,
+                 prog_d, credits, emitted, first, failed,
+                 stats) = self._serve_jit(
+                    self.params, self.state, pstate,
+                    jnp.asarray(hs["token"]),
+                    jnp.asarray(view.active), jnp.asarray(view.remaining),
+                    jnp.asarray(hs["keys"]), jnp.asarray(view.prefilled),
+                    jnp.asarray(view.prompt_len),
+                    jnp.asarray(hs["prompt_buf"]), credits,
+                    jnp.asarray(caps_np), jnp.asarray(poison_np))
             emitted = np.asarray(emitted)               # [stride, B]
             first = np.asarray(first)                   # [stride, B]
             failed_lane = np.asarray(failed).any(axis=0)      # [B]
@@ -1066,6 +1328,9 @@ class ServingEngine:
                     "cancelled" if status == "cancelled"
                     else "deadline_exceeded",
                     "reaped while queued")
+            # a released lane's staged plan rows are garbage for any
+            # successor tenant — stale until the next chunk masks them
+            stale_np |= release
             if release.any():
                 # ONE masked release per boundary covers every
                 # completion in the chunk — including instant
@@ -1081,6 +1346,80 @@ class ServingEngine:
             view = batcher.device_view()
         return ServeReport.build(batcher.completed, batcher.rejected,
                                  events)
+
+    def _measure_migration_spec(self, geo, *, iters: int = 5):
+        """Microbenchmark the jitted migration commit and derive a spec
+        whose link bandwidth is MEASURED rather than modeled.
+
+        Times `apply_migrations` on a synthetic full-capacity swap plan
+        (every row a promote+demote pair, so each row moves one page
+        across the link in each direction) against the all-sentinel
+        empty plan over the same cache — the delta isolates the
+        per-page move cost from fixed dispatch overhead. The latency
+        model prices a move at `1/link_bw + 1/hbm_bw` seconds per byte
+        (repro.core.placement.cost_aware), so the measured
+        seconds-per-byte inverts to a link bandwidth; the returned spec
+        is `cfg.spec` with `link_bw` replaced and the name suffixed
+        "+measured". Only cost_aware's payback thresholds consume this
+        — Eq.(1)-(5) telemetry pricing stays on the modeled spec.
+
+        Runs on the default device even under a mesh (the commit is a
+        per-shard local scatter; a single-device measurement is the
+        per-shard cost). Returns `(spec_or_None, detail)`: None when
+        the measurement cannot be inverted — timer noise drives the
+        delta non-positive, or the implied per-byte cost lands under
+        the modeled HBM floor — and the caller stays fully modeled.
+        `detail` is the `payback_measured` event payload either way.
+        """
+        base = self.cfg.spec
+        cap = control.plan_capacity(geo, self.cfg.migration_budget_frac)
+        L, B = geo.num_layers, geo.batch
+        r = np.arange(cap, dtype=np.int32)
+        pro_src = r % geo.host_pages
+        pro_dst = r % geo.hbm_pages
+        lay = jnp.asarray(r % L)
+        bat = jnp.asarray((r // L) % B)
+        plan = MigrationPlan(
+            lay, bat, jnp.asarray(pro_src), jnp.asarray(pro_dst),
+            jnp.asarray(r % geo.max_pages),
+            lay, bat, jnp.asarray(pro_dst), jnp.asarray(pro_src),
+            jnp.asarray((r + 1) % geo.max_pages))
+        empty = MigrationPlan.empty(cap)
+        host_kind = self._host_memory_kind if self.mesh is None else None
+        cache = init_cache(geo, host_kind=host_kind)
+        # jit a LOCAL wrapper, not `apply_migrations` itself: jax's
+        # tracing cache keys on the wrapped function object, so jitting
+        # the module-level function here would leave this measurement's
+        # entry behind in every later `jax.jit(apply_migrations)`
+        fn = jax.jit(lambda c, p: apply_migrations(c, p))
+        # compile + warm both variants outside the timed region
+        jax.block_until_ready(fn(cache, plan))
+        jax.block_until_ready(fn(cache, empty))
+
+        def best(p):
+            t = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(cache, p))
+                t = min(t, time.perf_counter() - t0)
+            return t
+
+        delta = best(plan) - best(empty)
+        moved = 2 * cap * geo.page_bytes()
+        detail = {"rows": int(cap), "bytes": int(moved),
+                  "delta_s": float(delta),
+                  "modeled_link_bw": float(base.link_bw),
+                  "measured_link_bw": None}
+        if delta <= 0.0 or moved == 0:
+            return None, detail
+        inv_link = delta / moved - 1.0 / base.hbm_bw
+        if inv_link <= 0.0:
+            return None, detail
+        link_bw = 1.0 / inv_link
+        detail["measured_link_bw"] = float(link_bw)
+        spec = dataclasses.replace(base, name=base.name + "+measured",
+                                   link_bw=link_bw)
+        return spec, detail
 
     def _admit_lane(self, req: Request, hs: Dict) -> None:
         """Bind an admitted request to its cache lane for CHUNKED

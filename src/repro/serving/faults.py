@@ -29,7 +29,12 @@ Fault taxonomy (all windows/steps are fused serve-step indices, i.e.
                   their paired demote rows) of the `MigrationPlan`
                   commit (`throttle_plan`, jit-safe). Placement — and
                   therefore telemetry and the bridge's scores —
-                  reflects the *committed* moves only.
+                  reflects the *committed* moves only. Under
+                  `EngineConfig.overlap_migrations` the caps throttle
+                  the COMMIT of the one-step-lagged STAGED buffer
+                  (post-revalidation), so the chaos contract is
+                  identical in both modes: plans exist, capped rows
+                  land, the rest evaporate.
   PoolFault       page-pool shrink wave: at `step` the scheduler's
                   pool gains `delta` pages (negative = shrink).
                   Reserved pages stay reserved, so `free_pages` may go
@@ -276,7 +281,13 @@ def throttle_plan(plan: MigrationPlan, cap) -> MigrationPlan:
     (cap >= capacity) is a bitwise identity and the executable never
     retraces across fault schedules. Demote rows are masked with the
     SAME row mask as promotes (`plan_by_score` pairs demote i with
-    promote i), so a partial commit can never orphan half a swap."""
+    promote i), so a partial commit can never orphan half a swap.
+
+    In overlap mode the engine applies this to the STAGED plan after
+    `control.revalidate_plan` masked its hazards — throttling the
+    commit, never the planning, so a zero cap (full drop / static
+    fallback) still leaves the pipeline staging fresh plans that then
+    evaporate, exactly like the inline path's drop semantics."""
     live = plan.pro_layer >= 0
     keep = (jnp.cumsum(live.astype(jnp.int32)) <= cap) & live
 

@@ -38,6 +38,26 @@ Protocol (duck-typed, no registration of the engine required):
                                 history-tracking policies see the same
                                 access stream the telemetry records.
 
+Plan-ahead semantics (`EngineConfig.overlap_migrations`): under the
+overlap pipeline a plan built at step N commits at step N+1, so the
+policy is planning for the step AFTER next — `read_mask` becomes a
+one-step-ahead re-reference oracle (decode reads are strongly
+self-similar step to step: the same prompt pages stream every step, and
+the Quest mask drifts by at most the EMA update). Every registered
+policy then additionally PROTECTS the read set's HBM residents from
+eviction (`protect_read_residents`: score +inf, so no candidate can
+displace a page the next step will almost surely read — evicting one
+would force the commit to race the very read it serves). Candidate
+ranking is unchanged; `static` plans nothing either way, and `quest`
+already ranks by its own next-step mask foresight, which subsumes the
+oracle. Protection is values-only, so both modes share one traced
+planner. The oracle needs a SPARSE read set to discriminate: dense
+attention (attention_sparsity 0) reads every alive page each step, so
+protecting the read set would freeze placement entirely — plan-ahead
+therefore activates only when attention_sparsity > 0, and dense
+overlap streams plan with inline scoring (the pipeline still overlaps
+the commit; only the extra protection is skipped).
+
 Registered policies (EngineConfig.policy):
 
   static      never migrates — an empty plan, the paper's baseline #2.
@@ -84,6 +104,18 @@ class DevicePolicy:
     name = "base"
 
     def __init__(self, *, cfg, geo):
+        #: one-step-ahead planning (overlap pipeline): treat `read_mask`
+        #: as a re-reference oracle and protect its HBM residents from
+        #: eviction. Requires a SPARSE read set to be informative:
+        #: dense attention reads every alive page, so the "oracle"
+        #: would protect every resident and freeze placement outright —
+        #: gate on attention_sparsity > 0. Set from
+        #: `EngineConfig.overlap_migrations`; duck-typed so standalone
+        #: policy construction (tests, the simulator bridge) defaults
+        #: to inline semantics.
+        self.plan_ahead = (
+            bool(getattr(cfg, "overlap_migrations", False))
+            and getattr(cfg, "attention_sparsity", 0.0) > 0.0)
         del cfg, geo
 
     def init_state(self, geo) -> Any:
@@ -125,6 +157,24 @@ def check_read_mask(cache: PagedKVCache, read_mask) -> None:
         (read_mask.shape, cache.page_table.shape)
 
 
+def protect_read_residents(cache: PagedKVCache, hbm_score: jax.Array,
+                           read_mask) -> jax.Array:
+    """Plan-ahead eviction guard: +inf the HBM score of every resident
+    whose logical page is in `read_mask` — the one-step-ahead
+    re-reference oracle of overlap mode (see the module docstring).
+
+    A +inf victim score means no finite candidate can displace the slot
+    (`control.plan_by_score`'s protection convention, same as
+    cost_aware's hysteresis band). No-op when the mask is absent (the
+    standalone / inline paths)."""
+    if read_mask is None:
+        return hbm_score
+    ho = cache.hbm_owner
+    in_read = jnp.take_along_axis(
+        read_mask, jnp.maximum(ho, 0), axis=-1) & (ho >= 0)
+    return jnp.where(in_read, _POS_INF, hbm_score)
+
+
 _REGISTRY: Dict[str, Callable[..., DevicePolicy]] = {}
 
 
@@ -162,7 +212,8 @@ def make_policy(name: str, *, cfg, geo) -> DevicePolicy:
 class StaticPolicy(DevicePolicy):
     """Never migrate (paper baseline #2) — a real policy, not an engine
     special case: the step applies an all-sentinel plan, which
-    `apply_migrations` drops bitwise."""
+    `apply_migrations` drops bitwise. Plan-ahead is vacuous: an empty
+    plan stages nothing, so overlap mode changes nothing here."""
 
     name = "static"
 
@@ -188,11 +239,22 @@ class ImportancePolicy(DevicePolicy):
 
     def plan(self, cache, state, active, budget,
              read_mask=None) -> PlanResult:
-        """Promote the hottest host pages by importance EMA."""
+        """Promote the hottest host pages by importance EMA; in
+        plan-ahead mode the read set's residents are additionally
+        protected (the staged commit must not race its own reads)."""
         check_read_mask(cache, read_mask)
-        plan, n_pro, n_dem = control.plan_migrations(
-            cache, budget=budget, promote_thresh=self._thresh,
-            active=active)
+        if not self.plan_ahead:
+            plan, n_pro, n_dem = control.plan_migrations(
+                cache, budget=budget, promote_thresh=self._thresh,
+                active=active)
+            return plan, state, (n_pro, n_dem)
+        imp = cache.importance
+        host_imp = control.slot_scores(imp, cache.host_owner)
+        hbm_imp = control.slot_scores(imp, cache.hbm_owner)
+        hbm_imp = protect_read_residents(cache, hbm_imp, read_mask)
+        plan, n_pro, n_dem = control.plan_by_score(
+            cache, host_imp, hbm_imp, budget=budget,
+            promote_thresh=self._thresh, active=active)
         return plan, state, (n_pro, n_dem)
 
 
@@ -246,6 +308,12 @@ class RecencyPolicy(DevicePolicy):
         scores = last.astype(jnp.float32)
         host_score = control.slot_scores(scores, cache.host_owner)
         hbm_score = control.slot_scores(scores, cache.hbm_owner)
+        if self.plan_ahead:
+            # one-step-ahead oracle: just-read residents are already
+            # the most recent (strict inequality shields them), but
+            # +inf makes the guarantee unconditional under the lagged
+            # commit
+            hbm_score = protect_read_residents(cache, hbm_score, read)
         # clamped at 0 so never-read pages (timestamp -1) don't qualify
         # while the stream is younger than the window
         thresh = jnp.maximum(step - self.window, 0).astype(jnp.float32)
@@ -305,6 +373,13 @@ class CostAwarePolicy(DevicePolicy):
         # residents warmer than the demote threshold are not victims
         protected = (cache.hbm_owner >= 0) & (hbm_imp >= state["t_demote"])
         hbm_score = jnp.where(protected, _POS_INF, hbm_imp)
+        if self.plan_ahead:
+            # the hysteresis band protects WARM residents; the oracle
+            # additionally protects the about-to-be-read ones, warm or
+            # not — a cold page the next step reads is still a terrible
+            # eviction under a lagged commit
+            hbm_score = protect_read_residents(cache, hbm_score,
+                                               read_mask)
         plan, n_pro, n_dem = control.plan_by_score(
             cache, host_score, hbm_score, budget=budget,
             promote_thresh=state["t_promote"], active=active)
@@ -323,6 +398,10 @@ class QuestPolicy(DevicePolicy):
     mask covers every alive page, so only free HBM slots are filled —
     page-granularity prefetch degenerates to first-touch placement,
     exactly as in the simulator baseline.
+
+    Plan-ahead is this policy's NATIVE mode: it already ranks by the
+    next step's mask and protects the mask's residents, which subsumes
+    the read-set oracle — overlap mode changes nothing in its scoring.
     """
 
     name = "quest"

@@ -20,7 +20,7 @@ import jax
 import numpy as np
 import pytest
 
-from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+from _hypothesis_compat import given, settings, st
 from repro import configs
 from repro.core.latency_model import degraded_spec
 from repro.core.placement.cost_aware import (
@@ -155,18 +155,28 @@ class TestFaultPlane:
 # --------------------------------------------------------------------------- #
 
 class TestChaosServe:
-    def _clean(self, dense_model, policy="importance", **serve_kw):
+    def _clean(self, dense_model, policy="importance", cfg_kw=None,
+               **serve_kw):
         model, params = dense_model
-        eng = ServingEngine(model, params, _cfg(policy))
+        eng = ServingEngine(model, params, _cfg(policy, **(cfg_kw or {})))
         reqs = _mk_requests(model.cfg.vocab)
         report = eng.serve(reqs, num_slots=2, seed=0, **serve_kw)
         return eng, report
 
-    def test_full_fault_schedule_degrades_gracefully(self, dense_model):
+    @pytest.mark.parametrize("overlap", [False, True],
+                             ids=["inline", "overlap"])
+    def test_full_fault_schedule_degrades_gracefully(self, dense_model,
+                                                     overlap):
         """All four fault kinds at once: no raise, statuses exhaustive,
-        fault-free lanes bitwise identical, ONE executable."""
+        fault-free lanes bitwise identical, ONE executable.
+
+        overlap=True runs the same schedule through the async-migration
+        pipeline: caps throttle the one-step-lagged staged buffer and
+        fallback-to-static masks its commits, so the PR 6 graceful-
+        degradation contract must hold verbatim in both modes."""
         model, params = dense_model
-        eng, clean = self._clean(dense_model)
+        eng, clean = self._clean(
+            dense_model, cfg_kw={"overlap_migrations": overlap})
         clean_out = {r.rid: list(r.output) for r in clean}
         assert all(r.status == "ok" for r in clean)
 

@@ -54,11 +54,12 @@ def _requests(vocab, n=5, base=32):
 
 
 def _serve(model, params, mesh, *, policy="importance", trace=False,
-           sparsity=0.0, ctx=160, slots=2, reqs=None):
+           sparsity=0.0, ctx=160, slots=2, reqs=None, overlap=False):
     eng = ServingEngine(model, params, EngineConfig(
         max_context=ctx, hbm_fraction=0.25, policy=policy,
         attention_sparsity=sparsity, spec=GH200, promote_thresh=1e-4,
-        telemetry_stride=8, prefill_chunk=16, trace_telemetry=trace),
+        telemetry_stride=8, prefill_chunk=16, trace_telemetry=trace,
+        overlap_migrations=overlap),
         mesh=mesh)
     report = eng.serve(reqs if reqs is not None
                        else _requests(model.cfg.vocab),
@@ -96,6 +97,23 @@ def test_mesh_cache_buffers_actually_sharded(model_params):
     # per-lane carries follow the lanes; fault caps stay replicated
     assert eng._cache.length.addressable_shards[0].data.shape[0] == \
         eng._cache.length.shape[0] // 2
+
+
+@needs_mesh
+def test_mesh_overlap_pipeline_parity(model_params):
+    """The async-migration pipeline under a mesh: the staged
+    MigrationPlan carry is replicated (launch/shardings.py "plan"
+    entry), the commit is a per-shard local scatter, and the overlap
+    serve matches the 1-device overlap serve token-for-token on ONE
+    executable — the pipeline never forks the compiled surface."""
+    model, params = model_params
+    _, ref = _serve(model, params, None, overlap=True)
+    eng, got = _serve(model, params, _mesh(2, 2), overlap=True)
+    assert eng._serve_jit._cache_size() == 1, \
+        eng._serve_jit._cache_size()
+    assert ref.statuses == got.statuses
+    assert {r.rid: list(r.output) for r in ref} == \
+        {r.rid: list(r.output) for r in got}
 
 
 @needs_mesh

@@ -112,8 +112,17 @@ class TestLaneReuseAttribution:
     """Two requests through ONE slot: the lane index is reused, the
     records must not cross-contaminate."""
 
+    @pytest.mark.parametrize("overlap", [False, True],
+                             ids=["inline", "overlap"])
     def test_sequential_requests_get_disjoint_clean_records(
-            self, dense_model):
+            self, dense_model, overlap):
+        """overlap=True is the lane-reuse NON-CONTAMINATION pin for the
+        staged migration buffer: request 0's final staged plan names
+        lane 0's slots, request 1 is rebound onto the SAME lane at the
+        boundary, and — static placement being deterministic — can
+        reproduce the exact (slot, logical) pairs revalidation would
+        wave through. `mask_plan_lanes` must drop those rows, or
+        request 1's rows here would show request 0's leaked pages."""
         model, params = dense_model
         rng = np.random.default_rng(5)
         # first request is LONGER than the second: leaked pages from
@@ -122,7 +131,9 @@ class TestLaneReuseAttribution:
                      max_new_tokens=6)
         r1 = Request(rid=1, prompt=rng.integers(0, model.cfg.vocab, (16,)),
                      max_new_tokens=6)
-        eng = ServingEngine(model, params, _cfg(trace_telemetry=True))
+        eng = ServingEngine(model, params,
+                            _cfg(trace_telemetry=True,
+                                 overlap_migrations=overlap))
         eng.serve([r0, r1], num_slots=1, seed=0)
         rec = trace_bridge.collect_serve(eng)
         atts = {a.rid: a for a in trace_bridge.attribute(rec)}
