@@ -106,6 +106,29 @@ A tenth leg measures what the async pipeline bought (EXPERIMENTS.md
            fractions equal within +-0.01 (one step of staging lag must
            not change WHERE reads land), and ONE executable per mode.
 
+An eleventh leg scores the stream the paper's SLOs actually see
+(EXPERIMENTS.md §Workloads):
+
+  goodput-sweep — seeded open-loop traffic from the workload plane
+           (`benchmarks/workloads.py`): per policy, three
+           single-pattern streams (Poisson / bursty on-off / diurnal)
+           drive the SAME engine to pin ONE serve executable across
+           arrival patterns (arrivals are pure data), then a mixed
+           Poisson+bursty sampled stream is served with SLO-aware
+           admission and scored into a goodput-under-SLO curve
+           (`trace_bridge.goodput_curve`): fraction of submitted
+           requests completed within per-tier targets at each target
+           scale, judged on the MODELED per-request latency (Eq.
+           (1)-(5) via `score_serve` request_scores — CPU wall clocks
+           cannot see what placement bought, the modeled TPOT can)
+           against the stream's live SA bound_fraction. Records
+           rows["goodput"]; the CI gate: every request terminal, one
+           executable per policy across all four streams, and
+           importance mean goodput over the curve >= static at equal
+           targets (the TPOT target is derived once from the static
+           stream's modeled median, so both policies face the same
+           contract).
+
 Writes BENCH_engine.json (see EXPERIMENTS.md §Perf-suite; the file is
 stamped with `schema_version` + the producing `commit` so trajectory
 tooling can parse it). The headline is fused/host steps-per-second;
@@ -120,6 +143,9 @@ Run:  PYTHONPATH=src python benchmarks/perf_engine.py
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python benchmarks/perf_engine.py --mesh-sweep
       (scaling sweep only, appended into rows["mesh_sweep"])
+      PYTHONPATH=src python benchmarks/perf_engine.py --goodput-sweep
+      (workload-plane goodput-under-SLO curves per policy, appended
+      into rows["goodput"])
 CI:   PYTHONPATH=src python benchmarks/perf_engine.py --ci
       (reduced geometry; additionally asserts fused >= eager steps/s,
       chunked-admission TTFT < eager-admission TTFT for the mid-stream
@@ -157,6 +183,7 @@ from repro.serving.faults import (
 )
 from repro.serving.policies import policy_names
 from repro.serving.scheduler import Request, TERMINAL_STATUSES
+from repro.serving.slo import SLOPolicy
 
 STEPS = 64          # multiple of STRIDE: scan lengths compile once in warmup
 STRIDE = 32
@@ -175,7 +202,13 @@ HOST_STEPS = 8          # the host baseline is too slow for more
 #: serve tokens/s + hit fraction + migrated bytes on the contended
 #: stream, plus the cost_aware measured-payback bound_fraction vs the
 #: PR 5 modeled baseline; EXPERIMENTS.md §Async-migration).
-BENCH_SCHEMA_VERSION = 5
+#: v6: added rows["goodput"] (`--goodput-sweep`: per-policy
+#: goodput-under-SLO curves on the workload plane's seeded mixed
+#: Poisson+bursty stream — modeled-latency goodput per target scale,
+#: live SA bound_fraction, per-arrival-pattern terminal-status and
+#: shed counts, TTFT decomposition percentiles, EOS-stop counts;
+#: EXPERIMENTS.md §Workloads).
+BENCH_SCHEMA_VERSION = 6
 
 #: PR 5 serve-sweep cost_aware aggregate bound_fraction on the ci
 #: stream with MODELED payback (the number measured recalibration has
@@ -833,6 +866,146 @@ def run_mesh_sweep(print_csv: bool = True, ci: bool = False):
     return sweep
 
 
+def _goodput_sweep(model, params, *, ci):
+    """Workload-plane goodput leg (module doc leg eleven /
+    EXPERIMENTS.md §Workloads).
+
+    Traffic comes from `benchmarks/workloads.py`: seeded heavy-tailed
+    prompts around the contended 272-token band (spilling the 16-page
+    per-lane HBM pool at ctx 512, Quest sparsity 0.5 — the geometry
+    where placement matters), priority tiers, and sampled
+    (temperature 0.7) decoding that stops on the model's real
+    `eos_id`. Per policy: the three single-pattern open-loop streams
+    (Poisson / bursty / diurnal) run through the SAME engine first —
+    arrivals are pure data, so the serve executable count must stay at
+    ONE across all of them — then the mixed Poisson+bursty stream is
+    served with SLO-aware admission at a compressed arrival clock
+    (every arrival lands before the first chunk completes, making
+    admission order and the scored traces deterministic across hosts
+    while the open-loop driver still runs) and scored into the
+    goodput-under-SLO curve on MODELED per-request latency. The TPOT
+    target is the static stream's modeled median, so both policies
+    face the same contract and scale 1.0 sits exactly at static's
+    half-good point.
+    """
+    import workloads as wl
+
+    sa_cfg = SAConfig(max_evaluations=8 if ci else 24,
+                      iters_per_level=3 if ci else 8, seed=0)
+    n_pat = 3 if ci else 5
+    n_mixed = 6 if ci else 12
+    base = dict(rate_rps=8.0, len_mu=5.6, len_sigma=0.08,
+                zipf_frac=0.1, min_prompt=192, max_prompt=288,
+                page_tokens=16, snap_frac=0.5, out_mu=2.0,
+                out_sigma=0.4, max_new=10, vocab=model.cfg.vocab,
+                temperature=0.7)
+    scales = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+    patterns = ("poisson", "bursty", "diurnal")
+    # live-admission contract: generous wall targets (tight targets
+    # are exercised by tests/test_slo.py; the bench streams should
+    # complete, so shed counts here are descriptive, normally zero)
+    admission = SLOPolicy.uniform(ttft_s=300.0, tpot_s=60.0)
+
+    def mk_engine(policy):
+        return ServingEngine(model, params, EngineConfig(
+            max_context=512, hbm_fraction=0.25, policy=policy,
+            attention_sparsity=0.5, spec=GH200, promote_thresh=1e-4,
+            telemetry_stride=8, prefill_chunk=16, prefill_budget=24,
+            eos_id=model.cfg.eos_id, trace_telemetry=True))
+
+    sweep = {"patterns": list(patterns), "scales": list(scales),
+             "latency": "modeled", "policies": {}}
+    tpot_target = None
+    for policy in ("static", "importance"):
+        eng = mk_engine(policy)
+        pat_rows = {}
+        for i, pat in enumerate(patterns):
+            stream = wl.generate(wl.WorkloadSpec(
+                seed=11 + i, n_requests=n_pat, arrival=pat, **base))
+            rep = wl.drive(eng, stream, num_slots=2, slo=admission)
+            statuses = list(rep.statuses.values())
+            assert all(s in TERMINAL_STATUSES for s in statuses), rep
+            pat_rows[pat] = {
+                "requests": len(statuses),
+                "ok": statuses.count("ok"),
+                "shed": sum(1 for r in rep.rejected
+                            if r.error is not None
+                            and r.error.code == "slo_shed"),
+                "eos_stops": rep.eos.get("eos_stops", 0),
+            }
+        mixed = wl.mixed_stream(101, n_mixed, **base)
+        rep = wl.drive(eng, mixed, num_slots=2, slo=admission,
+                       time_scale=1e-3)
+        assert all(s in TERMINAL_STATUSES
+                   for s in rep.statuses.values()), rep
+        execs = int(eng._serve_jit._cache_size())
+        rec = trace_bridge.collect_serve(eng)
+        if tpot_target is None:
+            scored = trace_bridge.score_serve(rec, GH200,
+                                              sa_cfg=sa_cfg)
+            tpots = sorted(sc["live_total_s"] / sc["steps"]
+                           for sc in scored["requests"].values()
+                           if sc["steps"])
+            tpot_target = float(tpots[len(tpots) // 2])
+        contract = SLOPolicy.uniform(ttft_s=300.0, tpot_s=tpot_target)
+        out = trace_bridge.goodput_curve(rec, GH200, rep, contract,
+                                         scales=scales, sa_cfg=sa_cfg)
+        curve = out["curve"]
+        sweep["policies"][policy] = {
+            "curve": curve,
+            "mean_goodput": float(np.mean([c["goodput"]
+                                           for c in curve])),
+            "bound_fraction": out["aggregate"].get("bound_fraction"),
+            "live_hit_fraction": out["aggregate"]["live_hit_fraction"],
+            "serve_executables": execs,
+            "ttft_parts": rep.ttft_parts,
+            "eos": rep.eos,
+            "arrival_patterns": pat_rows,
+        }
+    sweep["tpot_target_s"] = tpot_target
+    if ci:
+        for policy, row in sweep["policies"].items():
+            # one executable across poisson + bursty + diurnal + mixed:
+            # arrival patterns are data, never shapes
+            assert row["serve_executables"] == 1, \
+                (policy, row["serve_executables"])
+        st = sweep["policies"]["static"]["mean_goodput"]
+        imp = sweep["policies"]["importance"]["mean_goodput"]
+        # the deployable policy converts placement headroom into
+        # goodput at equal targets (equality allowed: a degenerate
+        # geometry no policy can beat)
+        assert imp >= st, (imp, st)
+    return sweep
+
+
+def run_goodput_sweep(print_csv: bool = True, ci: bool = False):
+    """Standalone `--goodput-sweep`: the workload-plane goodput leg
+    only, appended into an existing BENCH_engine.json when present
+    (the CI bench-smoke goodput step runs this and uploads the merged
+    artifact)."""
+    cfg = configs.get_smoke("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    sweep = _goodput_sweep(model, params, ci=ci)
+    try:
+        with open("BENCH_engine.json") as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {"rows": {}}
+    result.setdefault("rows", {})["goodput"] = sweep
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(_stamp(result), f, indent=2)
+    if print_csv:
+        for policy, row in sweep["policies"].items():
+            print(f"goodput/{policy}/mean_goodput,0.000,"
+                  f"{row['mean_goodput']:.3f}")
+            bf = row["bound_fraction"]
+            if bf is not None:
+                print(f"goodput/{policy}/bound_fraction,0.000,"
+                      f"{bf:.3f}")
+    return sweep
+
+
 def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
     cfg = configs.get_smoke("internlm2-1.8b")
     model = Model(cfg)
@@ -842,13 +1015,15 @@ def run(print_csv: bool = True, steps: int = STEPS, ci: bool = False):
         steps = min(steps, 2 * STRIDE)
 
     result = {"steps": steps, "stride": STRIDE, "ci": ci, "rows": {}}
-    # rows produced only by the standalone --mesh-sweep leg survive a
-    # default rerun, so the committed artifact keeps its scaling curve
+    # rows produced only by the standalone --mesh-sweep/--goodput-sweep
+    # legs survive a default rerun, so the committed artifact keeps its
+    # scaling curve and goodput curves
     try:
         with open("BENCH_engine.json") as f:
             prior = json.load(f).get("rows", {})
-        if "mesh_sweep" in prior:
-            result["rows"]["mesh_sweep"] = prior["mesh_sweep"]
+        for standalone in ("mesh_sweep", "goodput"):
+            if standalone in prior:
+                result["rows"][standalone] = prior[standalone]
     except (OSError, ValueError):
         pass
     rows = []
@@ -1063,8 +1238,15 @@ if __name__ == "__main__":
                          "comparison (tokens/s, hit fraction, migrated "
                          "bytes per mode + the measured-payback "
                          "cost_aware bound fraction)")
+    ap.add_argument("--goodput-sweep", action="store_true",
+                    help="run only the workload-plane goodput leg "
+                         "(per-policy goodput-under-SLO curves on the "
+                         "seeded mixed Poisson+bursty stream, one "
+                         "executable across arrival patterns)")
     args = ap.parse_args()
-    if args.overlap_sweep:
+    if args.goodput_sweep:
+        run_goodput_sweep(ci=args.ci)
+    elif args.overlap_sweep:
         run_overlap_sweep(ci=args.ci)
     elif args.mesh_sweep:
         run_mesh_sweep(ci=args.ci)

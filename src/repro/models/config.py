@@ -103,12 +103,19 @@ class ModelConfig:
     kv_page_tokens: int = 16
     #: supports O(sub-quadratic) decode at 500k context
     subquadratic: bool = False
+    #: the tokenizer's end-of-sequence id (public value per arch; None
+    #: when the config predates EOS plumbing). The serving stack reads
+    #: it through `EngineConfig(eos_id=model.cfg.eos_id)` — generated
+    #: traffic stops on the REAL id, not a probed sentinel.
+    eos_id: Optional[int] = None
 
     def __post_init__(self):
         if self.head_dim is None:
             object.__setattr__(self, "head_dim",
                                self.d_model // self.num_heads)
         assert self.num_heads % max(self.kv_heads, 1) == 0
+        assert self.eos_id is None or 0 <= self.eos_id < self.vocab, \
+            f"eos_id {self.eos_id} outside vocab {self.vocab}"
 
     # --- derived sizes -----------------------------------------------------
     @property

@@ -17,9 +17,13 @@ from repro.serving.sampling import SamplingConfig
 from repro.serving.scheduler import (
     ContinuousBatcher, Request, RequestError, TERMINAL_STATUSES,
 )
+from repro.serving.slo import (
+    SLOPolicy, SLOTarget, score_goodput,
+)
 
 __all__ = ["ServingEngine", "EngineConfig", "ServeReport", "StepStats",
            "SamplingConfig", "ContinuousBatcher", "Request",
            "RequestError", "TERMINAL_STATUSES", "DevicePolicy",
            "make_policy", "policy_names", "register", "FaultPlane",
-           "TierFault", "MigrationFault", "PoolFault", "PoisonFault"]
+           "TierFault", "MigrationFault", "PoolFault", "PoisonFault",
+           "SLOPolicy", "SLOTarget", "score_goodput"]

@@ -101,6 +101,7 @@ from repro.serving.sampling import (
 from repro.serving.scheduler import (
     ContinuousBatcher, Request, RequestError,
 )
+from repro.serving.slo import SLOPolicy
 
 
 @dataclasses.dataclass
@@ -241,6 +242,19 @@ class ServeReport:
     completed: List[Request]
     ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
     tpot: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: TTFT decomposition percentiles: queue_wait / prefill / throttle
+    #: (per request the three sum to TTFT — queue_wait is submit ->
+    #: first chunk, prefill the seconds of steps that consumed prompt
+    #: tokens, throttle the budget-starved + boundary-overhead rest)
+    ttft_parts: Dict[str, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
+    #: EOS accounting: {"eos_id", "eos_stops", "budget_stops"} — how
+    #: many "ok" requests stopped on the configured EOS id vs ran out
+    #: their token budget (`Request.stop_reason` per request)
+    eos: Dict[str, object] = dataclasses.field(default_factory=dict)
+    #: goodput-under-SLO row (stamped by `slo.score_goodput`; empty
+    #: when the stream was not scored against an SLOPolicy)
+    goodput: Dict[str, object] = dataclasses.field(default_factory=dict)
     #: requests refused before admission (typed `Request.error` each)
     rejected: List[Request] = dataclasses.field(default_factory=list)
     #: chronological degradation events (fault activations, pool
@@ -261,9 +275,11 @@ class ServeReport:
     @staticmethod
     def build(completed: List[Request],
               rejected: Optional[List[Request]] = None,
-              events: Optional[List[dict]] = None) -> "ServeReport":
+              events: Optional[List[dict]] = None,
+              eos_id: Optional[int] = None) -> "ServeReport":
         """Assemble a report from terminal requests: TTFT/TPOT
-        mean/p50/p95 from the completed requests' wall-clock stamps."""
+        mean/p50/p95 from the completed requests' wall-clock stamps,
+        the TTFT decomposition percentiles, and EOS-stop counts."""
         def pct(vals):
             if not vals:
                 return {}
@@ -279,8 +295,26 @@ class ServeReport:
                  for r in completed
                  if r.first_token_at is not None
                  and r.finished_at is not None and len(r.output) > 1]
+        # decomposition percentiles over requests the chunked loop
+        # attributed (the eager-admission baseline stamps first tokens
+        # at admission, before any chunk runs — no decomposition there)
+        attributed = [r for r in completed
+                      if r.first_token_at is not None
+                      and r.admitted_at is not None]
+        parts = {
+            "queue_wait": pct([r.queue_wait_s for r in attributed]),
+            "prefill": pct([r.prefill_s for r in attributed]),
+            "throttle": pct([r.throttle_s for r in attributed]),
+        }
+        eos = {
+            "eos_id": eos_id,
+            "eos_stops": sum(1 for r in completed
+                             if r.stop_reason == "eos"),
+            "budget_stops": sum(1 for r in completed
+                                if r.stop_reason == "budget"),
+        }
         return ServeReport(completed=list(completed), ttft=pct(ttfts),
-                           tpot=pct(tpots),
+                           tpot=pct(tpots), ttft_parts=parts, eos=eos,
                            rejected=list(rejected or []),
                            events=list(events or []))
 
@@ -721,7 +755,12 @@ class ServingEngine:
                                  cred)
                 else:
                     out_carry = (st, ps, tok, act, rem, ks, prog, cred)
-                return out_carry, (emitted, first, bad | bad0, stats)
+                # n_val is the step's ACTUAL prompt consumption per
+                # lane (0 on budget-starved steps) — the host's TTFT
+                # decomposition splits a prefilling lane's chunk time
+                # into prefill vs throttle off exactly this readback
+                return out_carry, (emitted, first, bad | bad0, n_val,
+                                   stats)
 
             if overlap:
                 carry = (state, pstate, staged, token, active, remaining,
@@ -729,18 +768,19 @@ class ServingEngine:
             else:
                 carry = (state, pstate, token, active, remaining, keys,
                          prefilled, credits)
-            carry, (emitted, first, failed, stats) = jax.lax.scan(
+            carry, (emitted, first, failed, pf_tok, stats) = jax.lax.scan(
                 body, carry, (mig_caps, poison))
             if overlap:
                 (state, pstate, staged, token, active, remaining, keys,
                  prefilled, credits) = carry
                 return (state, pstate, staged, token, active, remaining,
                         keys, prefilled, credits, emitted, first, failed,
-                        stats)
+                        pf_tok, stats)
             (state, pstate, token, active, remaining, keys, prefilled,
              credits) = carry
             return (state, pstate, token, active, remaining, keys,
-                    prefilled, credits, emitted, first, failed, stats)
+                    prefilled, credits, emitted, first, failed, pf_tok,
+                    stats)
 
         if overlap:
             def serve_chunk_fn(params, state, pstate, staged, token,
@@ -826,13 +866,15 @@ class ServingEngine:
                      lane_kv, lane, lane, lane_kv, rep, lane, rep,
                      step_lane)
             out_sh = (cache_sh, psh, plan_sh, lane, lane, lane, lane_kv,
-                      lane, rep, step_lane, step_lane, step_lane, None)
+                      lane, rep, step_lane, step_lane, step_lane,
+                      step_lane, None)
             donate = (1, 2, 3)
         else:
             in_sh = (pshard, cache_sh, psh, lane, lane, lane, lane_kv,
                      lane, lane, lane_kv, rep, rep, step_lane)
             out_sh = (cache_sh, psh, lane, lane, lane, lane_kv, lane,
-                      rep, step_lane, step_lane, step_lane, None)
+                      rep, step_lane, step_lane, step_lane, step_lane,
+                      None)
             donate = (1, 2)
         self._serve_jit = jax.jit(serve_chunk_fn, donate_argnums=donate,
                                   in_shardings=in_sh,
@@ -899,7 +941,8 @@ class ServingEngine:
               sampling: Optional[SamplingConfig] = None,
               seed: int = 0, total_pages: Optional[int] = None,
               max_skips: int = 8,
-              faults: Optional[FaultPlane] = None) -> ServeReport:
+              faults: Optional[FaultPlane] = None,
+              slo: Optional[SLOPolicy] = None) -> ServeReport:
         """Drive a request stream end-to-end through the fused hot path.
 
         A fixed batch of `num_slots` cache lanes runs as ONE jitted
@@ -983,6 +1026,30 @@ class ServingEngine:
         single-device stream (tests/test_mesh_serve.py; EXPERIMENTS.md
         §Mesh-sharding).
 
+        Open-loop traffic: a request with `arrival_s > 0` is held back
+        and SUBMITTED at the first chunk boundary whose wall clock
+        (relative to stream start) passes its arrival offset — the
+        workload plane's load driver (`benchmarks/workloads.py`). The
+        arrival pattern is pure DATA: bursty, diurnal, and Poisson
+        streams all drive the same serve-chunk executable (an idle
+        stream with pending arrivals sleeps between boundaries; shapes
+        never change). `queue_wait_s` then measures real queueing.
+
+        `slo` layers SLO-aware admission on top of the
+        `prefill_budget` token bucket: at every chunk boundary, AFTER
+        deadline/cancel reaping, each QUEUED request's earliest
+        achievable TTFT is projected (wait so far + prompt prefill at
+        the measured per-step cadence) and requests past their tier's
+        target are shed as `rejected` with error code "slo_shed" —
+        early, before they cost a lane or drag decode TPOT. A request
+        is never counted both "timeout" and SLO-shed: deadline reaping
+        runs first and removes it from the queue. Per-request TTFT
+        decomposition (`queue_wait_s` + `prefill_s` + `throttle_s` ==
+        TTFT, exact at the chunk-stride stamp resolution) lands on
+        every chunk-admitted request; `ServeReport.ttft_parts` carries
+        the percentiles and `slo.score_goodput` turns a report + an
+        `SLOPolicy` into the goodput row.
+
         `faults` optionally injects a deterministic adversity schedule
         (`FaultPlane`): tier-bandwidth degradation reprices telemetry
         under the degraded spec and recalibrates cost_aware paybacks;
@@ -1051,7 +1118,7 @@ class ServingEngine:
         self.batcher = batcher
         # per-request validation: an invalid request is REJECTED with a
         # typed error; everyone else keeps serving (no batch-wide abort)
-        for r in requests:
+        def submit_one(r: Request) -> None:
             if r.prompt is None:
                 batcher.reject_submit(
                     r, "empty_prompt",
@@ -1068,6 +1135,26 @@ class ServingEngine:
             else:
                 batcher.submit(r)   # may itself reject (duplicate /
                 #                     pool-infeasible footprint)
+
+        # open-loop load driver: requests with a positive arrival
+        # offset are held back and submitted at the first chunk
+        # boundary whose wall clock passes them — `submitted_at` (and
+        # so queue_wait/TTFT) stamps at ARRIVAL, not at serve() entry
+        t_start = time.time()
+        pending: List[Request] = sorted(
+            (r for r in requests if r.arrival_s > 0.0),
+            key=lambda r: r.arrival_s)
+        for r in requests:
+            if r.arrival_s <= 0.0:
+                submit_one(r)
+
+        def submit_arrivals() -> bool:
+            now_rel = time.time() - t_start
+            due = False
+            while pending and pending[0].arrival_s <= now_rel:
+                submit_one(pending.pop(0))
+                due = True
+            return due
 
         # fault plumbing: a neutral plane keeps the (always-compiled)
         # fault channel at identity values for clean runs
@@ -1143,24 +1230,71 @@ class ServingEngine:
                         # masks its rows before anything commits.
                         stale_np[req.lane] = True
 
+        #: EMA of the measured per-step wall seconds (from chunk
+        #: spans) — the SLO shed projection's prefill-cadence estimate
+        est_step_s: Optional[float] = None
+
+        def shed_slo() -> None:
+            """SLO-aware admission: project each QUEUED request's
+            earliest achievable TTFT and shed hopeless ones as
+            `rejected` / "slo_shed". Runs after deadline/cancel
+            reaping, so "timeout" and SLO-shed are mutually exclusive
+            by construction (both remove the request from the queue).
+            """
+            if slo is None:
+                return
+            now = time.time()
+            for req in list(batcher.queue):
+                # an expired or cancelled request belongs to the
+                # reaper: never convert a due "timeout"/"cancelled"
+                # into an SLO shed
+                if req.cancel_requested or (
+                        req.deadline_s is not None
+                        and now - req.submitted_at > req.deadline_s):
+                    continue
+                reason = slo.should_shed(req, now, est_step_s,
+                                         cfg.prefill_chunk)
+                if reason is not None:
+                    batcher.drop_queued(req, "rejected", "slo_shed",
+                                        reason)
+                    events.append({"kind": "slo_shed",
+                                   "step": batcher.step_idx,
+                                   "rid": req.rid, "tier": req.tier,
+                                   "reason": reason})
+
+        # stream start: admit FIRST (nobody has genuinely waited yet),
+        # then shed the queued remainder that already cannot make it
         admit()
+        shed_slo()
         view = batcher.device_view()
-        while batcher.has_work:
-            if not view.active.any():
-                # nothing live but work queued: the head can't be
-                # admitted with every page free (footprint vs a
-                # possibly shrunken pool) — reject it and move on
-                # instead of killing the stream mid-flight
-                if not batcher.queue:
-                    break
-                stuck = batcher.queue.popleft()
-                batcher.reject(
-                    stuck, "admission_stalled",
-                    f"needs {stuck.pages_needed} pages, pool has "
-                    f"{batcher.free_pages}/{batcher.total_pages} free")
+        while batcher.has_work or pending:
+            if submit_arrivals():
                 admit()
+                shed_slo()
                 view = batcher.device_view()
-                continue
+            if not view.active.any():
+                if batcher.queue:
+                    # nothing live but work queued: the head can't be
+                    # admitted with every page free (footprint vs a
+                    # possibly shrunken pool) — reject it and move on
+                    # instead of killing the stream mid-flight
+                    stuck = batcher.queue.popleft()
+                    batcher.reject(
+                        stuck, "admission_stalled",
+                        f"needs {stuck.pages_needed} pages, pool has "
+                        f"{batcher.free_pages}/{batcher.total_pages} free")
+                    admit()
+                    view = batcher.device_view()
+                    continue
+                if pending:
+                    # idle stream with future arrivals (open loop):
+                    # sleep toward the next one, bounded so the
+                    # boundary cadence stays responsive
+                    wait = pending[0].arrival_s - (time.time() - t_start)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+                    continue
+                break
             step0 = batcher.step_idx
             events.extend(faults.window_events(step0, stride))
             # tier fault: reprice + recalibrate under the spec that
@@ -1212,10 +1346,16 @@ class ServingEngine:
                 caps_np = np.zeros_like(caps_np)
             poison_np = faults.poison_steps(step0, stride, view.rids)
             t0 = time.time()
+            # TTFT decomposition anchor: a lane's clock switches from
+            # queue_wait to prefill/throttle the instant its first
+            # chunk starts running
+            for req in live.values():
+                if req.admitted_at is None:
+                    req.admitted_at = t0
             if cfg.overlap_migrations:
                 (self.state, pstate, staged, tok_d, act_d, _rem_d,
                  keys_d, prog_d, credits, emitted, first, failed,
-                 stats) = self._serve_jit(
+                 pf_d, stats) = self._serve_jit(
                     self.params, self.state, pstate, staged,
                     jnp.asarray(hs["token"]), jnp.asarray(view.active),
                     jnp.asarray(view.remaining), jnp.asarray(hs["keys"]),
@@ -1229,7 +1369,7 @@ class ServingEngine:
                 stale_np = np.zeros((B,), bool)
             else:
                 (self.state, pstate, tok_d, act_d, _rem_d, keys_d,
-                 prog_d, credits, emitted, first, failed,
+                 prog_d, credits, emitted, first, failed, pf_d,
                  stats) = self._serve_jit(
                     self.params, self.state, pstate,
                     jnp.asarray(hs["token"]),
@@ -1240,6 +1380,7 @@ class ServingEngine:
                     jnp.asarray(caps_np), jnp.asarray(poison_np))
             emitted = np.asarray(emitted)               # [stride, B]
             first = np.asarray(first)                   # [stride, B]
+            pf_tok = np.asarray(pf_d)                   # [stride, B]
             failed_lane = np.asarray(failed).any(axis=0)      # [B]
             hs["token"] = np.array(tok_d)               # writable copies:
             hs["keys"] = np.array(keys_d)               # admit() pokes them
@@ -1270,6 +1411,9 @@ class ServingEngine:
             # (a request finishing in one chunk still gets a per-token
             # latency, not a ~0 boundary-to-boundary delta)
             span = time.time() - t0
+            est = span / stride
+            est_step_s = est if est_step_s is None else \
+                0.5 * (est_step_s + est)
 
             def stamp(row):
                 return t0 + (row + 1) / stride * span
@@ -1281,6 +1425,25 @@ class ServingEngine:
                 rows = np.where(first[:, lane] >= 0, first[:, lane],
                                 emitted[:, lane])
                 got = np.nonzero(rows >= 0)[0]
+                if req.first_token_at is None and \
+                        req.admitted_at is not None:
+                    # TTFT attribution up to the crossing row: rows
+                    # where the lane ran prefill tokens are charged to
+                    # prefill_s, budget-throttled rows (token bucket
+                    # held the lane back) to throttle_s, and any host
+                    # gap since the cursor (queue->dispatch, boundary
+                    # work between chunks) to throttle_s as well — so
+                    # queue_wait + prefill + throttle == TTFT exactly
+                    crossed = first[:, lane].max() >= 0
+                    c = int(np.argmax(first[:, lane] >= 0)) \
+                        if crossed else stride - 1
+                    cursor = (req.admitted_at + req.prefill_s +
+                              req.throttle_s)
+                    req.throttle_s += max(0.0, t0 - cursor)
+                    ran = int((pf_tok[:c + 1, lane] > 0).sum())
+                    w = span / stride
+                    req.prefill_s += ran * w
+                    req.throttle_s += (c + 1 - ran) * w
                 if req.first_token_at is None and first[:, lane].max() >= 0:
                     req.first_token_at = stamp(
                         int(np.argmax(first[:, lane] >= 0)))
@@ -1299,6 +1462,10 @@ class ServingEngine:
                             "poisoned_logits",
                             f"non-finite logits on lane {lane}"))
                     else:
+                        req.stop_reason = "eos" if (
+                            cfg.eos_id is not None and req.output
+                            and req.output[-1] == cfg.eos_id) \
+                            else "budget"
                         batcher.complete(req)
                     if got.size:
                         req.finished_at = stamp(int(got[-1]))
@@ -1342,10 +1509,14 @@ class ServingEngine:
             if delta:
                 batcher.resize_pool(delta)
             batcher.step_idx += stride
+            # SLO shedding runs AFTER deadline/cancel reaping (so a
+            # request is never both "timeout" and SLO-shed) and before
+            # admission refills the freed lanes
+            shed_slo()
             admit()
             view = batcher.device_view()
         return ServeReport.build(batcher.completed, batcher.rejected,
-                                 events)
+                                 events, eos_id=cfg.eos_id)
 
     def _measure_migration_spec(self, geo, *, iters: int = 5):
         """Microbenchmark the jitted migration commit and derive a spec

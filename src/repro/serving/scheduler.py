@@ -119,6 +119,34 @@ class Request:
     #: cooperative cancellation flag (set via `cancel()`); honored by
     #: the engine at chunk boundaries -> status "cancelled"
     cancel_requested: bool = False
+    #: open-loop arrival offset in seconds from stream start (the
+    #: workload plane stamps this; `serve` submits the request at the
+    #: first chunk boundary whose wall clock passes it — 0.0 = submit
+    #: immediately, the pre-workload behavior)
+    arrival_s: float = 0.0
+    #: priority tier name (workload plane); an `SLOPolicy` maps it to
+    #: per-tier TTFT/TPOT targets. None = no tier (never SLO-shed).
+    tier: Optional[str] = None
+    #: wall-clock instant the lane's first chunk started running —
+    #: TTFT decomposes as queue_wait (admitted_at - submitted_at)
+    #: + prefill_s + throttle_s (stamped by the engine; see
+    #: EXPERIMENTS.md §Workloads)
+    admitted_at: Optional[float] = None
+    #: seconds of serve steps that consumed this request's prompt
+    prefill_s: float = 0.0
+    #: seconds the admitted lane sat prefill-stalled: prefill-budget
+    #: bucket starvation plus chunk-boundary host overhead
+    throttle_s: float = 0.0
+    #: why an "ok" request stopped: "eos" | "budget" (None otherwise)
+    stop_reason: Optional[str] = None
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Seconds from submit to the lane's first serve chunk (None
+        until admitted)."""
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
 
     def cancel(self) -> None:
         """Request cooperative cancellation: the engine reaps the
@@ -240,6 +268,10 @@ class ContinuousBatcher:
         req.status = "pending"
         req.error = None
         req.cancel_requested = False
+        req.admitted_at = None
+        req.prefill_s = 0.0
+        req.throttle_s = 0.0
+        req.stop_reason = None
 
     def reject_submit(self, req: Request, code: str,
                       detail: str = "") -> None:

@@ -498,3 +498,29 @@ def score_serve(rec: ServeTraceRecord, spec, *,
         report.request_scores.update(requests)
         report.headroom.update(agg)
     return {"aggregate": agg, "requests": requests}
+
+
+def goodput_curve(rec: ServeTraceRecord, spec, report, policy, *,
+                  scales: Sequence[float] = (0.25, 0.5, 1.0, 2.0,
+                                             4.0, 8.0),
+                  latency: str = "modeled",
+                  sa_cfg=None) -> Dict[str, object]:
+    """Goodput-under-SLO curve for one served stream, scored against
+    the live SA bound.
+
+    Runs `score_serve` once (stamping `report.request_scores`, which
+    the modeled-latency goodput view reads), then scores the report's
+    terminal statuses + latencies against the SLO `policy` at each
+    target scale (`repro.serving.slo.score_goodput`). The curve pairs
+    with the aggregate `bound_fraction`: a policy can only convert
+    placement headroom into goodput at the scales where latency — not
+    admission — is the binding constraint, which is exactly what the
+    per-policy curves in `BENCH_engine.json["rows"]["goodput"]` show
+    (see `benchmarks/perf_engine.py --goodput-sweep`).
+    """
+    from repro.serving.slo import score_goodput
+
+    scored = score_serve(rec, spec, report=report, sa_cfg=sa_cfg)
+    curve = [score_goodput(report, policy, scale=s, latency=latency)
+             for s in scales]
+    return {"aggregate": scored["aggregate"], "curve": curve}

@@ -1,0 +1,369 @@
+"""SLO plane: TTFT decomposition, SLO-aware admission shedding,
+goodput scoring, and real-EOS termination of sampled traffic.
+
+The regression contracts (repro.serving.slo / ServingEngine.serve):
+
+  * per-request `queue_wait_s + prefill_s + throttle_s == TTFT`, exact
+    up to float rounding of the chunk-stride stamps — with a tight
+    `prefill_budget` forcing genuinely nonzero throttle time;
+  * "timeout"/"cancelled" and SLO-shed are mutually exclusive: a
+    queued request with an expired deadline is always the reaper's,
+    never converted into an "slo_shed" rejection;
+  * shedding removes only QUEUED requests (live lanes finish), tier
+    targets select who sheds, every shed is a typed "rejected";
+  * `score_goodput` counts exactly the "ok"-within-scaled-targets
+    fraction, wall or modeled latency;
+  * sampled (non-greedy) streams stop on the model config's REAL
+    `eos_id` within budget, with consistent EOS statistics on the
+    report (the stale-tokenizer follow-up: no probed sentinel ids).
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.serving import (
+    EngineConfig, Request, SLOPolicy, SLOTarget, ServingEngine,
+    TERMINAL_STATUSES, score_goodput,
+)
+from repro.serving.engine import ServeReport
+from repro.serving.sampling import SamplingConfig
+from repro.serving.slo import (
+    DEFAULT_TIER, ttft_decomposition_residual,
+)
+from repro.core.tiers import GH200
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.get_smoke("internlm2-1.8b")
+    m = Model(cfg)
+    return m, m.init(jax.random.key(0))
+
+
+def _cfg(**kw):
+    return EngineConfig(max_context=128, hbm_fraction=0.25,
+                        policy="importance", attention_sparsity=0.0,
+                        spec=GH200, promote_thresh=0.005,
+                        telemetry_stride=4, prefill_chunk=16, **kw)
+
+
+def _mk_requests(vocab, n=4, seed=3, budget=6, plen=32, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, vocab, (plen,)),
+                    max_new_tokens=budget, **kw) for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# SLOPolicy mechanics (pure, no model)
+# --------------------------------------------------------------------------- #
+
+class TestPolicy:
+    def test_target_for_tier_fallback(self):
+        pol = SLOPolicy({"interactive": SLOTarget(0.1, 0.01),
+                         DEFAULT_TIER: SLOTarget(1.0, 0.1)})
+        assert pol.target_for(Request(rid=0, tier="interactive")).ttft_s \
+            == 0.1
+        assert pol.target_for(Request(rid=1, tier="unknown")).ttft_s \
+            == 1.0
+        assert pol.target_for(Request(rid=2)).ttft_s == 1.0
+        bare = SLOPolicy({"interactive": SLOTarget(0.1, 0.01)})
+        assert bare.target_for(Request(rid=3, tier="batch")) is None
+
+    def test_projection_counts_wait_and_prefill(self):
+        pol = SLOPolicy.uniform(1.0, 0.1)
+        r = Request(rid=0, prompt_len=33)
+        r.submitted_at = 100.0
+        # unknown cadence: projection is the wait alone
+        assert pol.projected_ttft(r, 100.5, None, 16) == 0.5
+        # 33 tokens / chunk 16 -> 3 steps at 0.2s each
+        assert abs(pol.projected_ttft(r, 100.5, 0.2, 16)
+                   - (0.5 + 0.6)) < 1e-12
+
+    def test_should_shed_respects_slack(self):
+        pol = SLOPolicy.uniform(1.0, 0.1, shed_slack=2.0)
+        r = Request(rid=0, prompt_len=16)
+        r.submitted_at = 0.0
+        assert pol.should_shed(r, 1.5, None, 16) is None   # < 2x target
+        reason = pol.should_shed(r, 2.5, None, 16)
+        assert reason is not None and "target" in reason
+        # no target -> never shed
+        bare = SLOPolicy({})
+        assert bare.should_shed(r, 1e9, None, 16) is None
+
+    def test_scaled_target(self):
+        t = SLOTarget(1.0, 0.1).scaled(2.0)
+        assert t.ttft_s == 2.0 and t.tpot_s == 0.2
+
+
+# --------------------------------------------------------------------------- #
+# goodput scoring (pure, no model)
+# --------------------------------------------------------------------------- #
+
+def _stamped(rid, *, status="ok", ttft=0.5, tpot=0.05, n_out=4,
+             tier=None):
+    r = Request(rid=rid, prompt_len=8, max_new_tokens=n_out, tier=tier)
+    r.status = status
+    r.submitted_at = 100.0
+    if status == "ok":
+        r.first_token_at = 100.0 + ttft
+        r.finished_at = r.first_token_at + tpot * (n_out - 1)
+        r.output = list(range(n_out))
+    return r
+
+
+class TestGoodput:
+    def test_wall_goodput_counts_within_target(self):
+        from repro.serving.scheduler import RequestError
+        pol = SLOPolicy.uniform(1.0, 0.1)
+        fast = _stamped(0, ttft=0.5, tpot=0.05)
+        slow = _stamped(1, ttft=2.0, tpot=0.05)         # misses TTFT
+        shed = _stamped(2, status="rejected")
+        shed.error = RequestError("slo_shed", "projected over target")
+        rep = ServeReport.build([fast, slow], [shed])
+        out = score_goodput(rep, pol)
+        assert out["good_requests"] == 1
+        assert out["total_requests"] == 3
+        assert abs(out["goodput"] - 1 / 3) < 1e-12
+        assert out["shed_requests"] == 1
+        assert rep.goodput == out                       # stamped
+        # looser scale admits the slow one; shed never recovers
+        loose = score_goodput(rep, pol, scale=4.0)
+        assert loose["good_requests"] == 2
+
+    def test_modeled_goodput_reads_request_scores(self):
+        pol = SLOPolicy.uniform(1.0, 0.1)
+        a = _stamped(0, ttft=50.0)      # wall TTFT hopeless: ignored
+        b = _stamped(1, ttft=50.0)
+        rep = ServeReport.build([a, b])
+        rep.request_scores.update({
+            0: {"steps": 4.0, "live_total_s": 0.2},     # tpot 0.05: good
+            1: {"steps": 4.0, "live_total_s": 0.8},     # tpot 0.2: bad
+        })
+        out = score_goodput(rep, pol, latency="modeled")
+        assert out["good_requests"] == 1
+        # a request with no modeled score cannot be judged good
+        rep2 = ServeReport.build([a])
+        assert score_goodput(rep2, pol,
+                             latency="modeled")["good_requests"] == 0
+
+    def test_per_tier_split(self):
+        pol = SLOPolicy({"interactive": SLOTarget(1.0, 0.1),
+                         "batch": SLOTarget(100.0, 10.0)})
+        rep = ServeReport.build([
+            _stamped(0, tier="interactive", ttft=0.5),
+            _stamped(1, tier="interactive", ttft=5.0),
+            _stamped(2, tier="batch", ttft=5.0)])
+        out = score_goodput(rep, pol)
+        assert out["per_tier"]["interactive"] == \
+            {"good": 1, "total": 2, "goodput": 0.5}
+        assert out["per_tier"]["batch"]["goodput"] == 1.0
+
+
+# --------------------------------------------------------------------------- #
+# TTFT decomposition: queue_wait + prefill + throttle == TTFT
+# --------------------------------------------------------------------------- #
+
+class TestDecomposition:
+    def test_identity_with_throttle(self, dense_model):
+        """Tight prefill budget (8 tokens/step vs 2 lanes x 16 demand)
+        forces bucket-starved steps: throttle_s must be genuinely
+        nonzero and the three parts must still sum to TTFT exactly
+        (float rounding of the chunk-stride stamps only)."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg(prefill_budget=8))
+        reqs = _mk_requests(model.cfg.vocab, n=5, budget=6)
+        report = eng.serve(reqs, num_slots=2, seed=0)
+        assert all(s == "ok" for s in report.statuses.values())
+        res = ttft_decomposition_residual(report)
+        assert res.size == 5
+        assert res.max() < 1e-5, res
+        assert any(r.throttle_s > 0 for r in report.completed)
+        assert all(r.prefill_s > 0 for r in report.completed)
+        # later admissions genuinely queued behind the 2 slots
+        waits = [r.queue_wait_s for r in report.completed]
+        assert all(w is not None and w >= 0 for w in waits)
+        assert max(waits) > min(waits)
+        parts = report.ttft_parts
+        assert set(parts) == {"queue_wait", "prefill", "throttle"}
+        for row in parts.values():
+            assert {"mean", "p50", "p95"} <= set(row)
+
+    def test_identity_without_budget(self, dense_model):
+        """Unbudgeted streams decompose too (throttle is then just the
+        boundary host overhead)."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        report = eng.serve(_mk_requests(model.cfg.vocab), num_slots=2,
+                           seed=0)
+        res = ttft_decomposition_residual(report)
+        assert res.size == 4 and res.max() < 1e-5, res
+
+
+# --------------------------------------------------------------------------- #
+# SLO-aware admission shedding
+# --------------------------------------------------------------------------- #
+
+class TestShedding:
+    def test_tight_slo_sheds_queued_as_typed_rejection(self, dense_model):
+        """An impossible target: the first `num_slots` requests admit
+        at stream start (nobody has waited yet) and finish; every
+        QUEUED request sheds as a typed "rejected"/"slo_shed" with an
+        event each, and nothing ends in two statuses."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=4, budget=4)
+        report = eng.serve(reqs, num_slots=2, seed=0,
+                           slo=SLOPolicy.uniform(0.0, 10.0))
+        statuses = report.statuses
+        assert len(statuses) == 4
+        assert statuses[0] == "ok" and statuses[1] == "ok"
+        assert statuses[2] == "rejected" and statuses[3] == "rejected"
+        for r in report.rejected:
+            assert r.error.code == "slo_shed"
+            assert "target" in r.error.detail
+        shed_events = [e for e in report.events
+                       if e["kind"] == "slo_shed"]
+        assert sorted(e["rid"] for e in shed_events) == [2, 3]
+
+    def test_loose_slo_sheds_nothing(self, dense_model):
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        report = eng.serve(_mk_requests(model.cfg.vocab), num_slots=2,
+                           seed=0, slo=SLOPolicy.uniform(300.0, 60.0))
+        assert all(s == "ok" for s in report.statuses.values())
+        assert not [e for e in report.events if e["kind"] == "slo_shed"]
+
+    def test_tier_targets_select_who_sheds(self, dense_model):
+        """Queued interactive requests shed under an impossible
+        interactive target; queued batch requests (loose target) and
+        already-admitted interactive ones keep serving."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=6, budget=4)
+        for i, r in enumerate(reqs):
+            r.tier = "interactive" if i in (0, 1, 2, 4) else "batch"
+        pol = SLOPolicy({"interactive": SLOTarget(0.0, 10.0),
+                         "batch": SLOTarget(300.0, 60.0)})
+        report = eng.serve(reqs, num_slots=2, seed=0, slo=pol)
+        statuses = report.statuses
+        # 0, 1 admitted before the first shed pass -> live -> finish;
+        # queued interactive 2, 4 shed; batch 3, 5 survive the queue
+        assert statuses[0] == "ok" and statuses[1] == "ok"
+        assert statuses[2] == "rejected" and statuses[4] == "rejected"
+        assert statuses[3] == "ok" and statuses[5] == "ok"
+        for rid in (2, 4):
+            victim = next(r for r in report.rejected if r.rid == rid)
+            assert victim.error.code == "slo_shed"
+
+    def test_timeout_and_shed_mutually_exclusive(self, dense_model):
+        """A queued request with an expired deadline belongs to the
+        reaper even under an impossible SLO: exactly one terminal
+        status ("timeout"), no slo_shed event for it."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=5, budget=4)
+        reqs[3].deadline_s = 0.0                        # queued victim
+        report = eng.serve(reqs, num_slots=2, seed=0,
+                           slo=SLOPolicy.uniform(0.0, 10.0))
+        statuses = report.statuses
+        assert statuses[3] == "timeout"
+        victim = next(r for r in report.completed + report.rejected
+                      if r.rid == 3)
+        assert victim.error.code == "deadline_exceeded"
+        assert not [e for e in report.events
+                    if e["kind"] == "slo_shed" and e["rid"] == 3]
+        # every rid appears exactly once across completed + rejected
+        rids = [r.rid for r in report.completed + report.rejected]
+        assert sorted(rids) == sorted(set(rids))
+        assert all(s in TERMINAL_STATUSES for s in statuses.values())
+
+    def test_open_loop_arrivals_queue_wait_measured(self, dense_model):
+        """arrival_s > 0 holds a request back: it is submitted at a
+        later boundary and its submitted_at reflects the live submit,
+        so queue_wait measures real queueing, not generation time."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        reqs = _mk_requests(model.cfg.vocab, n=3, budget=4)
+        reqs[2].arrival_s = 0.15
+        t0 = time.time()
+        report = eng.serve(reqs, num_slots=2, seed=0)
+        assert all(s == "ok" for s in report.statuses.values())
+        late = next(r for r in report.completed if r.rid == 2)
+        assert late.submitted_at >= t0 + 0.15
+        assert late.first_token_at is not None
+
+
+# --------------------------------------------------------------------------- #
+# sampled traffic terminates on the config's REAL eos id
+# --------------------------------------------------------------------------- #
+
+class TestEOS:
+    def test_model_config_validates_eos(self):
+        with pytest.raises(AssertionError):
+            ModelConfig(name="bad", family="dense", num_layers=1,
+                        d_model=32, num_heads=2, kv_heads=2, d_ff=64,
+                        vocab=16, head_dim=16, eos_id=16)
+
+    def test_public_configs_carry_eos(self):
+        assert configs.get_smoke("internlm2-1.8b").eos_id == 2
+        from repro.configs.llama31_8b import CONFIG as llama
+        assert llama.eos_id == 128001
+        from repro.configs.qwen3_32b import CONFIG as qwen
+        assert qwen.eos_id == 151645
+
+    def test_sampled_stream_stops_on_real_eos(self):
+        """Tiny vocab (16) + high temperature: every decode step has
+        ~1/16 chance of drawing the real eos id, so over 4 requests x
+        48-token budgets at a pinned seed the probability NO stream
+        stops on EOS is ~(15/16)^192 ~ 4e-6. Structural contracts hold
+        regardless: termination within budget, per-request stop_reason
+        consistent with the emitted tokens, report EOS statistics
+        consistent with stop reasons."""
+        cfg = ModelConfig(name="eos-smoke", family="dense",
+                          num_layers=2, d_model=32, num_heads=2,
+                          kv_heads=2, d_ff=64, vocab=16, head_dim=16,
+                          eos_id=3)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        eng = ServingEngine(model, params, _cfg(eos_id=cfg.eos_id))
+        budget = 48
+        reqs = _mk_requests(cfg.vocab, n=4, budget=budget, plen=16)
+        report = eng.serve(
+            reqs, num_slots=2, seed=7,
+            sampling=SamplingConfig(temperature=1.5))
+        assert all(s == "ok" for s in report.statuses.values())
+        assert report.eos["eos_id"] == 3
+        for r in report.completed:
+            assert 1 <= len(r.output) <= budget
+            if r.stop_reason == "eos":
+                assert r.output[-1] == 3
+                assert len(r.output) <= budget
+            else:
+                assert r.stop_reason == "budget"
+                assert len(r.output) == budget
+        assert report.eos["eos_stops"] == sum(
+            1 for r in report.completed if r.stop_reason == "eos")
+        assert report.eos["budget_stops"] == sum(
+            1 for r in report.completed if r.stop_reason == "budget")
+        assert report.eos["eos_stops"] + report.eos["budget_stops"] \
+            == len(report.completed)
+        assert report.eos["eos_stops"] >= 1    # P(fail) ~ 4e-6, pinned
+
+    def test_greedy_budget_stream_reports_budget_stops(self, dense_model):
+        """Without an eos_id the engine never stops early and every ok
+        request reports stop_reason "budget" (the pre-EOS behavior,
+        bitwise unchanged)."""
+        model, params = dense_model
+        eng = ServingEngine(model, params, _cfg())
+        report = eng.serve(_mk_requests(model.cfg.vocab, budget=5),
+                           num_slots=2, seed=0)
+        assert report.eos["eos_id"] is None
+        assert report.eos["eos_stops"] == 0
+        assert all(r.stop_reason == "budget" and len(r.output) == 5
+                   for r in report.completed)
